@@ -1,0 +1,34 @@
+"""Shared benchmark harness utilities.
+
+Every benchmark mirrors one paper table/figure, runs at CPU-feasible scale
+(reduced widths / fewer rounds — the TREND is the reproduction target, the
+absolute numbers belong to the paper's GPU testbed), and emits CSV rows.
+"""
+from __future__ import annotations
+
+import csv
+import time
+from pathlib import Path
+from typing import Iterable, Sequence
+
+OUT_DIR = Path("experiments/benchmarks")
+
+
+def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.csv"
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

@@ -1,0 +1,55 @@
+"""Fig. 1 reproduction: probability density of log10 |dW|, |dM|, |dV|.
+
+The paper's claim: dW >> dM >> dV in magnitude (normal-ish in log space),
+which justifies the Gamma-term dominance and hence SSM = Top_k(|dW|).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro.core import FedConfig, fed_init
+from repro.core.fed import _local_adam, _tree_sub
+from repro.data import iid_partition, synthetic_image_dataset, client_batches
+from repro.models.vision import build_vision
+from repro.optim import AdamHyper
+
+
+def run(model: str = "cnn", rounds: int = 3, width: float = 0.25,
+        local_epochs: int = 5):
+    params, fwd, loss_fn, acc_fn, ds = build_vision(model, width=width)
+    imgs, labels = synthetic_image_dataset(ds, 1024)
+    parts = iid_partition(1024, 4)
+    fed = FedConfig(algorithm="fedadam", alpha=1.0,
+                    local_epochs=local_epochs, n_clients=4,
+                    adam=AdamHyper(lr=1e-3))
+    st = fed_init(fed, params)
+
+    (bx, by), _ = client_batches([imgs, labels], parts, 32)
+    batch = (jnp.asarray(bx[0]), jnp.asarray(by[0]))
+    w, m, v, _ = _local_adam(loss_fn, st.W, st.M, st.V, batch, fed)
+    dW = _tree_sub(w, st.W)
+    dM = _tree_sub(m, st.M)
+    dV = _tree_sub(v, st.V)
+
+    rows = []
+    stats = {}
+    for name, tree in [("dW", dW), ("dM", dM), ("dV", dV)]:
+        flat = jnp.concatenate([jnp.abs(x).reshape(-1)
+                                for x in jax.tree.leaves(tree)])
+        flat = flat[flat > 0]
+        logs = jnp.log10(flat)
+        stats[name] = float(jnp.mean(logs))
+        hist, edges = np.histogram(np.asarray(logs), bins=40, density=True)
+        for h, e in zip(hist, edges):
+            rows.append((name, float(e), float(h)))
+    write_csv("fig1_delta_magnitudes", ("tensor", "log10_mag", "density"),
+              rows)
+    ordered = stats["dW"] > stats["dM"] > stats["dV"]
+    return dict(mean_log10=stats, magnitude_ordering_holds=bool(ordered))
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,48 @@
+"""Figs. 3/4/5 reproduction: FedAdam-SSM sensitivity to local epochs L,
+learning rate eta, and sparsification ratio alpha."""
+from __future__ import annotations
+
+from benchmarks.common import write_csv
+from benchmarks.fl_vision import run_fl
+
+
+def run_L(model="cnn", values=(1, 3, 10, 30), rounds=12, **kw):
+    rows = []
+    for L in values:
+        res = run_fl(model, "fedadam_ssm", local_epochs=L, rounds=rounds,
+                     **kw)
+        for r, (l, a) in enumerate(zip(res.losses, res.accs)):
+            rows.append((model, L, r, l, a))
+    write_csv(f"fig3_{model}_local_epochs",
+              ("model", "L", "round", "loss", "test_acc"), rows)
+    return rows
+
+
+def run_lr(model="cnn", values=(1e-4, 1e-3, 1e-2, 0.3), rounds=12, **kw):
+    rows = []
+    for lr in values:
+        res = run_fl(model, "fedadam_ssm", lr=lr, rounds=rounds, **kw)
+        for r, (l, a) in enumerate(zip(res.losses, res.accs)):
+            rows.append((model, lr, r, l, a))
+    write_csv(f"fig4_{model}_lr",
+              ("model", "lr", "round", "loss", "test_acc"), rows)
+    return rows
+
+
+def run_alpha(model="cnn", values=(0.01, 0.05, 0.2, 1.0), rounds=12, **kw):
+    rows = []
+    final = {}
+    for a in values:
+        res = run_fl(model, "fedadam_ssm", alpha=a, rounds=rounds, **kw)
+        for r, (l, ac) in enumerate(zip(res.losses, res.accs)):
+            rows.append((model, a, r, l, ac))
+        final[a] = res.accs[-1]
+    write_csv(f"fig5_{model}_alpha",
+              ("model", "alpha", "round", "loss", "test_acc"), rows)
+    return final
+
+
+if __name__ == "__main__":
+    print("fig3:", run_L()[-1])
+    print("fig4:", run_lr()[-1])
+    print("fig5:", run_alpha())

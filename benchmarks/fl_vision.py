@@ -1,0 +1,92 @@
+"""Shared FL-on-vision runner for the paper's experiment suite
+(Section VII: CNN/Fashion-MNIST, VGG-11/CIFAR-10, ResNet-18/SVHN)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FedConfig, fed_init, make_fl_round
+from repro.core.comm import bits_for
+from repro.data import (client_batches, dirichlet_partition, iid_partition,
+                        synthetic_image_dataset)
+from repro.models.vision import build_vision
+from repro.optim import AdamHyper
+
+
+@dataclasses.dataclass
+class RunResult:
+    algorithm: str
+    losses: List[float]
+    accs: List[float]
+    cum_bits: List[float]
+
+    def comm_to_acc(self, target: float) -> float:
+        """Minimum cumulative uplink (Mbit) to reach target accuracy —
+        Table I's 'Comm.' column; inf if never reached."""
+        for acc, bits in zip(self.accs, self.cum_bits):
+            if acc >= target:
+                return bits / 1e6
+        return float("inf")
+
+
+def run_fl(model: str = "cnn", algorithm: str = "fedadam_ssm", *,
+           n_clients: int = 8, rounds: int = 15, local_epochs: int = 3,
+           alpha: float = 0.05, lr: float = 1e-3, batch: int = 32,
+           non_iid: bool = False, theta: float = 0.1, width: float = 0.25,
+           n_train: int = 2048, n_test: int = 512, seed: int = 0,
+           eval_every: int = 1, warmup_rounds: int = 2) -> RunResult:
+    params, fwd, loss_fn, acc_fn, ds = build_vision(
+        model, width=width, key=jax.random.PRNGKey(seed))
+    imgs, labels = synthetic_image_dataset(ds, n_train + n_test, seed=seed)
+    tr_x, tr_y = imgs[:n_train], labels[:n_train]
+    te = (jnp.asarray(imgs[n_train:]), jnp.asarray(labels[n_train:]))
+    if non_iid:
+        parts = dirichlet_partition(tr_y, n_clients, theta, seed=seed)
+    else:
+        parts = iid_partition(n_train, n_clients, seed=seed)
+
+    d = sum(x.size for x in jax.tree.leaves(params))
+
+    def make(algo, a):
+        fed = FedConfig(algorithm=algo, alpha=a, local_epochs=local_epochs,
+                        n_clients=n_clients, adam=AdamHyper(lr=lr),
+                        client_mode="scan")
+        return fed, jax.jit(make_fl_round(fed, loss_fn))
+
+    # 1-bit Adam two-phase: dense warmup populating V, then compressed
+    two_phase = algorithm == "onebit_adam"
+    fed, round_fn = make("fedadam" if two_phase else algorithm,
+                         1.0 if algorithm in ("fedadam", "onebit_adam",
+                                              "fedsgd", "efficient_adam")
+                         else alpha)
+    state = fed_init(fed, params)
+
+    losses, accs, cum_bits = [], [], []
+    total_bits = 0.0
+    acc_eval = jax.jit(acc_fn)
+    for r in range(rounds):
+        if two_phase and r == warmup_rounds:
+            fed, round_fn = make("onebit_adam", 1.0)
+            st2 = fed_init(fed, state.W)
+            state = st2._replace(M=state.M, V=state.V)
+        (bx, by), weights = client_batches([tr_x, tr_y], parts, batch,
+                                           seed=seed * 1000 + r)
+        state, mets = round_fn(
+            state, (jnp.asarray(bx), jnp.asarray(by)),
+            jnp.asarray(weights))
+        algo_now = ("fedadam" if (two_phase and r < warmup_rounds)
+                    else algorithm)
+        total_bits += bits_for(
+            algo_now, d, max(1, int(round(alpha * d))), n_clients,
+            warmup=(two_phase and r < warmup_rounds))
+        losses.append(float(jnp.mean(mets["loss"])))
+        if r % eval_every == 0 or r == rounds - 1:
+            accs.append(float(acc_eval(state.W, te)))
+        else:
+            accs.append(accs[-1] if accs else 0.0)
+        cum_bits.append(total_bits)
+    return RunResult(algorithm, losses, accs, cum_bits)

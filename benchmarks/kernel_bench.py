@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks: us/call of the jnp reference paths at FL-client
+scales (CPU timings; the Pallas kernels themselves are TPU-targeted and
+interpret-mode timing is not meaningful — what we measure here is the
+ALGORITHMIC win of threshold-selection over sort-based top-k, which holds
+on any backend)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import write_csv
+from repro.core import sparsify as S
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(sizes=(1 << 16, 1 << 20, 1 << 23), alpha=0.05):
+    rows = []
+    for n in sizes:
+        x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+        k = S.k_for(n, alpha)
+        sort_fn = jax.jit(lambda v: S.topk_mask_exact(v, k))
+        thr_fn = jax.jit(lambda v: S.topk_mask_threshold(v, k))
+        t_sort = _time(sort_fn, x)
+        t_thr = _time(thr_fn, x)
+        rows.append(("topk_sort", n, f"{t_sort:.1f}", ""))
+        rows.append(("topk_threshold", n, f"{t_thr:.1f}",
+                     f"speedup={t_sort/t_thr:.2f}x"))
+    write_csv("kernel_bench", ("name", "n", "us_per_call", "derived"), rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(c) for c in r))

@@ -1,0 +1,90 @@
+"""Aggregate the dry-run JSON artifacts into the EXPERIMENTS.md SRoofline
+table: three roofline terms per (arch x shape x mesh), dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import write_csv
+from repro import roofline as RL
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_rows(dryrun_dir: Path = DRYRUN_DIR):
+    rows = []
+    for p in sorted(dryrun_dir.glob("*.json")):
+        if "_probe" in p.name or "__tag" in p.name:
+            continue
+        r = json.loads(p.read_text())
+        if r.get("status") == "skip":
+            rows.append(dict(arch=r["arch"], shape=r["shape"],
+                             mesh=r["mesh"], status="skip",
+                             reason=r.get("reason", "")))
+            continue
+        if r.get("status") != "ok":
+            rows.append(dict(arch=r["arch"], shape=r["shape"],
+                             mesh=r["mesh"], status="error",
+                             reason=r.get("error", "")[:100]))
+            continue
+        chips = r["chips"]
+        rl = RL.Roofline(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"], chips=chips,
+            hlo_flops=max(r.get("flops") or 0.0, r["model_flops"]),
+            hlo_bytes=r.get("bytes_accessed") or 0.0,
+            coll_bytes=r["collectives"]["total"],
+            model_flops=r["model_flops"])
+        row = rl.row()
+        row.update(status="ok",
+                   mem_per_dev_gb=r["memory"]["peak_per_device_bytes"] / 1e9,
+                   hlo_flops_raw=r.get("flops"),
+                   compile_s=r.get("t_compile_s"))
+        rows.append(row)
+    return rows
+
+
+def run():
+    rows = load_rows()
+    header = ("arch", "shape", "mesh", "status", "t_compute_s", "t_memory_s",
+              "t_collective_s", "bottleneck", "mem_per_dev_gb",
+              "model_flops", "useful_ratio", "reason")
+    out = []
+    for r in rows:
+        out.append(tuple(
+            r.get(k, "") if not isinstance(r.get(k), float)
+            else f"{r[k]:.4g}" for k in header))
+    write_csv("roofline_table", header, out)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    by_bottleneck = {}
+    for r in ok:
+        by_bottleneck.setdefault(r["bottleneck"], []).append(
+            f"{r['arch']}/{r['shape']}/{r['mesh']}")
+    return dict(n_ok=len(ok),
+                n_skip=len([r for r in rows if r.get("status") == "skip"]),
+                n_err=len([r for r in rows if r.get("status") == "error"]),
+                bottlenecks={k: len(v) for k, v in by_bottleneck.items()})
+
+
+def markdown_table(dryrun_dir: Path = DRYRUN_DIR) -> str:
+    rows = load_rows(dryrun_dir)
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s "
+             "| bottleneck | mem/dev GB | useful | note |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | "
+                         f"— | — | {r['status'].upper()} | — | — | "
+                         f"{r.get('reason','')[:80]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.2e} | {r['t_memory']:.2e} "
+            f"| {r['t_collective']:.2e} | **{r['bottleneck']}** "
+            f"| {r['mem_per_dev_gb']:.2f} | {r['useful_ratio']:.2f} | |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(run())
+    print(markdown_table())

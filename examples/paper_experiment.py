@@ -1,0 +1,44 @@
+"""Reproduce the paper's Section-VII experiment protocol end-to-end on one
+model/dataset pair: all baselines, IID + non-IID, accuracy-vs-communication
+summary (Fig. 2 / Table I analog at CPU scale).
+
+    PYTHONPATH=src python examples/paper_experiment.py --model cnn
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.fl_vision import run_fl  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="cnn",
+                    choices=["cnn", "vgg11", "resnet18"])
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--non-iid", action="store_true")
+    args = ap.parse_args()
+
+    algos = ["fedadam_ssm", "fedadam_top", "fairness_top", "ssm_m",
+             "ssm_v", "fedadam", "onebit_adam", "efficient_adam"]
+    print(f"model={args.model} rounds={args.rounds} "
+          f"{'non-IID(0.1)' if args.non_iid else 'IID'}")
+    print(f"{'algorithm':16s} {'final_acc':>9s} {'MB/round':>9s} "
+          f"{'MB to 90% best':>14s}")
+    results = {}
+    for algo in algos:
+        res = run_fl(args.model, algo, rounds=args.rounds,
+                     n_clients=args.clients, non_iid=args.non_iid)
+        results[algo] = res
+    best = max(max(r.accs) for r in results.values())
+    for algo, res in results.items():
+        mb_round = (res.cum_bits[0]) / 1e6 / 8
+        print(f"{algo:16s} {res.accs[-1]:9.3f} {mb_round:9.2f} "
+              f"{res.comm_to_acc(0.9 * best)/8:14.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: FedAdam-SSM vs dense FedAdam on a federated image task.
+
+Runs in ~2 minutes on CPU.  Shows the public API end-to-end: build a model,
+wrap any loss in the FL round, watch accuracy per uplink megabit.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import FedConfig, fed_init, make_fl_round
+from repro.core.comm import bits_for
+from repro.data import (client_batches, dirichlet_partition,
+                        synthetic_image_dataset)
+from repro.models.vision import build_vision
+from repro.optim import AdamHyper
+
+
+def main():
+    # 1. a model + loss (any pytree-of-params callable works)
+    params, fwd, loss_fn, acc_fn, ds = build_vision("cnn", width=0.25)
+    d = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: CNN ({d/1e3:.0f}k params), dataset: synthetic {ds}")
+
+    # 2. federated non-IID data (Dirichlet 0.1, the paper's setting)
+    imgs, labels = synthetic_image_dataset(ds, 2048)
+    parts = dirichlet_partition(labels[:1536], n_clients=8, theta=0.1)
+    test = (jnp.asarray(imgs[1536:]), jnp.asarray(labels[1536:]))
+
+    # 3. two optimizers: the paper's FedAdam-SSM and dense FedAdam
+    for algo, alpha in [("fedadam_ssm", 0.05), ("fedadam", 1.0)]:
+        fed = FedConfig(algorithm=algo, alpha=alpha, local_epochs=3,
+                        n_clients=8, adam=AdamHyper(lr=1e-3))
+        round_fn = jax.jit(make_fl_round(fed, loss_fn))
+        state = fed_init(fed, params)
+        bits_round = bits_for(algo, d, max(1, int(alpha * d)), 8)
+        print(f"\n== {algo} (alpha={alpha}) — "
+              f"{bits_round/8e6:.2f} MB uplink/round ==")
+        total_mb = 0.0
+        for r in range(10):
+            (bx, by), w = client_batches([imgs[:1536], labels[:1536]],
+                                         parts, 32, seed=r)
+            state, mets = round_fn(state, (jnp.asarray(bx), jnp.asarray(by)),
+                                   jnp.asarray(w))
+            total_mb += bits_round / 8e6
+            acc = float(acc_fn(state.W, test))
+            print(f" round {r:2d} loss={float(jnp.mean(mets['loss'])):.4f} "
+                  f"test_acc={acc:.3f} cum_uplink={total_mb:7.2f} MB")
+
+
+if __name__ == "__main__":
+    main()

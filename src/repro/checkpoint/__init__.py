@@ -1,0 +1,1 @@
+from repro.checkpoint.io import load_pytree, save_pytree, save_fed_state, load_fed_state  # noqa: F401

@@ -1,0 +1,66 @@
+"""npz-based pytree checkpointing with path-keyed leaves + JSON metadata.
+
+Layout-agnostic: leaves are saved under their joined tree path, so any
+pytree of arrays (params, FedState, decode caches) round-trips.  Sharded
+arrays are gathered to host before save (fine at example scale; a real
+multi-host deployment would use a tensorstore-backed writer — noted in
+DESIGN.md as the one substrate we stub at cluster scale).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.fed import FedState
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(tree: Any, path: str | Path, meta: dict | None = None):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_path_str(kp)] = np.asarray(leaf)
+    np.savez(path, **flat)
+    if meta is not None:
+        Path(str(path) + ".meta.json").write_text(json.dumps(meta, indent=1))
+
+
+def load_pytree(like: Any, path: str | Path) -> Any:
+    """Load into the structure of ``like`` (shapes/dtypes validated)."""
+    data = np.load(str(path) if str(path).endswith(".npz")
+                   else str(path) + ".npz")
+    kps, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, leaf in kps:
+        key = _path_str(kp)
+        arr = data[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_fed_state(state: FedState, path: str | Path, meta: dict | None = None):
+    save_pytree(state._asdict(), path, meta)
+
+
+def load_fed_state(like: FedState, path: str | Path) -> FedState:
+    d = load_pytree(like._asdict(), path)
+    return FedState(**d)

@@ -1,0 +1,44 @@
+"""Architecture configs (one module per assigned architecture).
+
+Importing this package registers every config in the registry; use
+``repro.configs.get_config(name)`` / ``available_archs()``.
+"""
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    AttentionSpec,
+    EncoderSpec,
+    LayerSpec,
+    MoESpec,
+    SSMSpec,
+    available_archs,
+    get_config,
+    reduce_for_smoke,
+    register,
+)
+
+# Register all architectures (import order = table order in the brief).
+from repro.configs import (  # noqa: F401,E402
+    kimi_k2_1t_a32b,
+    deepseek_v2_lite_16b,
+    gemma3_27b,
+    starcoder2_7b,
+    llava_next_mistral_7b,
+    jamba_1_5_large_398b,
+    mamba2_1_3b,
+    whisper_base,
+    mistral_large_123b,
+    starcoder2_3b,
+)
+
+ASSIGNED_ARCHS = (
+    "kimi-k2-1t-a32b",
+    "deepseek-v2-lite-16b",
+    "gemma3-27b",
+    "starcoder2-7b",
+    "llava-next-mistral-7b",
+    "jamba-1-5-large-398b",
+    "mamba2-1-3b",
+    "whisper-base",
+    "mistral-large-123b",
+    "starcoder2-3b",
+)

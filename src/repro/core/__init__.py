@@ -1,0 +1,11 @@
+"""The paper's primary contribution: FedAdam-SSM — sparse, mask-aligned
+federated Adam (sparsifiers, shared-mask rules, the FL round, baselines,
+communication accounting, and the Theorem-1/2/3 bound calculators)."""
+from repro.core.fed import (  # noqa: F401
+    ALGORITHMS,
+    FedConfig,
+    FedState,
+    fed_init,
+    make_fl_round,
+)
+from repro.core import comm, masks, quantize, sparsify  # noqa: F401

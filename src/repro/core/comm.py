@@ -1,0 +1,72 @@
+"""Uplink/downlink communication accounting (bits) — Section IV & VII.
+
+The paper counts, per communication round, with q = float precision bits,
+d = model dimension, k = alpha*d, N = #devices:
+
+* FedAdam        : 3 N d q
+* FedAdam-Top    : min{ 3N(kq + d),  3Nk(q + log2 d) }      (mask vs index)
+* FedAdam-SSM    : min{ N(3kq + d),  Nk(3q + log2 d) }      (one mask/index)
+* 1-bit Adam     : warm-up rounds 3Ndq; compressed rounds N(d + q*d/B)
+                   (sign bits + one scale per block of B)
+* Efficient-Adam : N(b*d + q*d/B) for b-bit two-way quantization
+
+These are *accounting* functions (exact bit counts reported as metrics);
+the on-mesh collective realization lives in core/aggregate.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+
+def _ceil_log2(d: int) -> float:
+    return math.ceil(math.log2(max(2, d)))
+
+
+def bits_fedadam(d: int, n_clients: int, q: int = 32) -> int:
+    return 3 * n_clients * d * q
+
+
+def bits_fedadam_top(d: int, k: int, n_clients: int, q: int = 32) -> int:
+    mask_repr = 3 * n_clients * (k * q + d)
+    index_repr = 3 * n_clients * k * (q + _ceil_log2(d))
+    return int(min(mask_repr, index_repr))
+
+
+def bits_fedadam_ssm(d: int, k: int, n_clients: int, q: int = 32) -> int:
+    mask_repr = n_clients * (3 * k * q + d)
+    index_repr = n_clients * k * (3 * q + _ceil_log2(d))
+    return int(min(mask_repr, index_repr))
+
+
+def bits_fedsgd(d: int, n_clients: int, q: int = 32) -> int:
+    return n_clients * d * q
+
+
+def bits_onebit_adam(d: int, n_clients: int, q: int = 32,
+                     warmup: bool = False, block: int = 1024) -> int:
+    if warmup:
+        return bits_fedadam(d, n_clients, q)
+    return n_clients * (d + q * math.ceil(d / block))
+
+
+def bits_efficient_adam(d: int, n_clients: int, q: int = 32,
+                        bits: int = 8, block: int = 1024) -> int:
+    return n_clients * (bits * d + q * math.ceil(d / block))
+
+
+def bits_for(algorithm: str, d: int, k: int, n_clients: int, q: int = 32,
+             warmup: bool = False, quant_bits: int = 8) -> int:
+    if algorithm in ("fedadam",):
+        return bits_fedadam(d, n_clients, q)
+    if algorithm in ("fedadam_top",):
+        return bits_fedadam_top(d, k, n_clients, q)
+    if algorithm in ("fedadam_ssm", "ssm_m", "ssm_v", "fairness_top"):
+        return bits_fedadam_ssm(d, k, n_clients, q)
+    if algorithm == "fedsgd":
+        return bits_fedsgd(d, n_clients, q)
+    if algorithm == "onebit_adam":
+        return bits_onebit_adam(d, n_clients, q, warmup=warmup)
+    if algorithm == "efficient_adam":
+        return bits_efficient_adam(d, n_clients, q, bits=quant_bits)
+    raise ValueError(algorithm)

@@ -1,0 +1,66 @@
+"""Quantizers for the quantized-FedAdam baselines (1-bit Adam,
+Efficient-Adam) and for the beyond-paper low-precision transports.
+
+All quantizers are blockwise (one fp32 scale per `block` elements) and come
+with an exact dequantizer, so error-feedback residuals are computable.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+def _blocks(x: jax.Array, block: int):
+    flat = x.reshape(-1).astype(_F32)
+    n = flat.size
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), n, pad
+
+
+def sign_quant(x: jax.Array, block: int = 1024) -> jax.Array:
+    """1-bit sign quantization with per-block L1 scale (1-bit Adam)."""
+    xb, n, _ = _blocks(x, block)
+    scale = jnp.mean(jnp.abs(xb), axis=1, keepdims=True)
+    q = jnp.sign(xb) * scale
+    return q.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+def uniform_quant(x: jax.Array, bits: int = 8, block: int = 1024) -> jax.Array:
+    """Symmetric b-bit uniform quantization with per-block max scale."""
+    xb, n, _ = _blocks(x, block)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / qmax + 1e-30
+    q = jnp.round(xb / scale)
+    q = jnp.clip(q, -qmax, qmax) * scale
+    return q.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+def int8_store(x: jax.Array, block: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Beyond-paper: int8 + per-block scale storage for resident global
+    moments (memory-roofline optimization).  Returns (q_int8, scales)."""
+    xb, n, pad = _blocks(x, block)
+    scale = jnp.max(jnp.abs(xb), axis=1) / 127.0 + 1e-30
+    q = jnp.round(xb / scale[:, None]).astype(jnp.int8)
+    return q, scale.astype(_F32)
+
+
+def int8_load(q: jax.Array, scale: jax.Array, shape, dtype,
+              block: int = 256) -> jax.Array:
+    flat = (q.astype(_F32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def tree_sign_quant(tree, block: int = 1024):
+    return jax.tree.map(lambda x: sign_quant(x, block), tree)
+
+
+def tree_uniform_quant(tree, bits: int = 8, block: int = 1024):
+    return jax.tree.map(lambda x: uniform_quant(x, bits, block), tree)

@@ -1,0 +1,173 @@
+"""Top-k sparsification primitives (Definition 1 & 2 of the paper).
+
+Two mask constructions:
+
+* ``topk_mask_exact`` — scatter of the exact top-k indices (|mask| == k
+  always; ties broken by index order).  O(d log d) sort-based; used for
+  small models, tests and anywhere exactness matters.
+* ``topk_mask_threshold`` — mask = |x| >= tau with tau chosen by the
+  O(d)-per-pass bisection the ``topk_mask`` Pallas kernel implements;
+  |mask| may exceed k by ties.  This is the production path for d ~ 1e9+.
+
+Masks are computed per-tensor ("per_tensor" scope, k_i = ceil(alpha * n_i))
+or over the concatenated flat model ("global" scope — the paper's exact
+formulation; feasible when the model fits one host).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.flatten_util import ravel_pytree
+
+_F32 = jnp.float32
+
+
+def k_for(n: int, alpha: float) -> int:
+    """Number of kept elements for a tensor of n elements (>=1)."""
+    return max(1, int(round(alpha * n)))
+
+
+# Tensors larger than BLOCK elements use *blocked* top-k: the flat tensor is
+# tiled into BLOCK-sized rows and top-(alpha*BLOCK) is taken per row.  This
+# (a) keeps every index within int32 (XLA scatter/gather requirement —
+# stacked MoE leaves reach 3e11 elements), (b) is embarrassingly shardable,
+# and (c) is the standard practical surrogate for global top-k (same
+# k-contraction factor per block).  Leaves <= BLOCK use exact top-k.
+BLOCK = 1 << 20
+
+
+def blocked_topk_mask(x: jax.Array, alpha: float,
+                      block: int = BLOCK) -> jax.Array:
+    """Exact top-k within each BLOCK-sized tile of flat x."""
+    flat = x.reshape(-1)
+    n = flat.size
+    nb = -(-n // block)
+    pad = nb * block - n
+    a = jnp.abs(jnp.pad(flat, (0, pad))).reshape(nb, block)
+    k = k_for(block, alpha)
+    _, idx = lax.top_k(a, k)                      # (nb, k) int32 local
+    mask = jnp.zeros((nb, block), bool)
+    rows = jnp.broadcast_to(jnp.arange(nb)[:, None], idx.shape)
+    mask = mask.at[rows, idx].set(True)
+    return mask.reshape(-1)[:n].reshape(x.shape)
+
+
+def topk_mask_exact(x: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the k largest-|.| elements of flat/ND x."""
+    flat = jnp.abs(x.reshape(-1))
+    _, idx = lax.top_k(flat, k)
+    mask = jnp.zeros(flat.shape, bool).at[idx].set(True)
+    return mask.reshape(x.shape)
+
+
+def topk_mask_threshold(x: jax.Array, k: int, iters: int = 24) -> jax.Array:
+    """Threshold-bisection mask (ties may push count above k).
+
+    Pure-jnp reference of the Pallas ``topk_mask`` kernel: binary-search a
+    threshold tau in [0, max|x|] such that count(|x| >= tau) ~ k, then mask.
+
+    SHAPE-PRESERVING on purpose: no reshape/flatten — reductions over the
+    (possibly mesh-sharded) dims lower to partial-reduce + tiny all-reduce,
+    whereas a flatten of a sharded tensor forces a full all-gather.  Counts
+    accumulate in f32 (exact to 2^24 per partial; bisection tolerance far
+    coarser than the rounding).
+    """
+    a = jnp.abs(x).astype(_F32)
+    hi = jnp.max(a)
+    lo = jnp.zeros((), _F32)
+    kf = jnp.asarray(k, _F32)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((a >= mid).astype(_F32))
+        # too many kept -> raise threshold (move lo up)
+        lo, hi = jnp.where(cnt > kf, mid, lo), jnp.where(cnt > kf, hi, mid)
+        return lo, hi
+
+    lo, hi = lax.fori_loop(0, iters, body, (lo, hi))
+    # `lo` keeps count >= k; guard the degenerate all-equal case by falling
+    # back to hi when lo never moved.
+    tau = jnp.where(jnp.sum((a >= lo).astype(_F32)) >= kf, lo, hi)
+    return a >= tau
+
+
+def sparsify(x: jax.Array, mask: jax.Array) -> jax.Array:
+    """Top_k(x) = x . mask (Definition 1)."""
+    return jnp.where(mask, x, jnp.zeros((), x.dtype))
+
+
+def compress_to_coo(x: jax.Array, mask_idx: jax.Array) -> jax.Array:
+    """Gather the k masked values (mask_idx: (k,) int32 into flat x)."""
+    return jnp.take(x.reshape(-1), mask_idx)
+
+
+def mask_indices(mask: jax.Array, k: int) -> jax.Array:
+    """Indices of the k True entries of mask (flat order).  Requires the
+    mask to have >= k set bits (exact construction guarantees == k)."""
+    score = mask.reshape(-1).astype(jnp.int8)
+    _, idx = lax.top_k(score, k)
+    return jnp.sort(idx)
+
+
+def scatter_from_coo(values: jax.Array, idx: jax.Array, n: int,
+                     dtype=None) -> jax.Array:
+    out = jnp.zeros((n,), dtype or values.dtype)
+    return out.at[idx].add(values)
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level helpers
+# ---------------------------------------------------------------------------
+
+
+def tree_topk_masks(score_tree, alpha: float, scope: str = "per_tensor",
+                    exact: bool = True):
+    """Boolean mask pytree selecting ~alpha of the elements of score_tree
+    by magnitude.  scope="global" ranks across the whole flattened model
+    (the paper's Definition 1 applied to the full d-vector)."""
+    def mk(s, k):
+        if not exact:
+            # production path: O(n) streaming threshold bisection — no
+            # sort, O(1) temp memory (this is what the topk_mask Pallas
+            # kernel implements on TPU)
+            return topk_mask_threshold(s, k)
+        if s.size > BLOCK:
+            return blocked_topk_mask(s, alpha)
+        return topk_mask_exact(s, k)
+
+    if scope == "per_tensor":
+        return jax.tree.map(lambda s: mk(s, k_for(s.size, alpha)), score_tree)
+    flat, unravel = ravel_pytree(score_tree)
+    mask_flat = mk(flat, k_for(flat.size, alpha))
+    return unravel_bool(mask_flat, score_tree)
+
+
+def unravel_bool(mask_flat, like_tree):
+    leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    out, off = [], 0
+    for leaf in leaves:
+        n = leaf.size
+        out.append(mask_flat[off:off + n].reshape(leaf.shape))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_sparsify(tree, masks):
+    return jax.tree.map(sparsify, tree, masks)
+
+
+def tree_sparsity_error(tree, masks):
+    """|| (1 - mask) . x ||_2 over the whole pytree (Theorem 1 terms)."""
+    sq = jax.tree.map(
+        lambda x, m: jnp.sum(jnp.where(m, 0.0, x.astype(_F32)) ** 2),
+        tree, masks)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+def tree_norm(tree):
+    sq = jax.tree.map(lambda x: jnp.sum(x.astype(_F32) ** 2), tree)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))

@@ -1,0 +1,10 @@
+from repro.data.federated import (  # noqa: F401
+    dirichlet_partition,
+    iid_partition,
+    client_batches,
+)
+from repro.data.synthetic import (  # noqa: F401
+    synthetic_image_dataset,
+    synthetic_tokens,
+    synthetic_frontend_embeds,
+)

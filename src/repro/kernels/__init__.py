@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the algorithm's compute hot-spots.
+
+Each kernel package ships:
+  <name>.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target);
+  ops.py    — jit'd dispatch wrapper (auto interpret=True off-TPU);
+  ref.py    — pure-jnp oracle used by the allclose test sweeps.
+
+Kernels:
+  topk_mask   — O(d) threshold selection for the paper's Top_k sparsifier
+                (vs O(d log d) sort): blockwise |x| count over log2-spaced
+                bins + one linear refinement pass, each pass streaming
+                8x1024 VMEM tiles.
+  fused_adam  — the paper's local update (Eqs. 3-5) for w/m/v in a single
+                VMEM round-trip (4 reads + 3 writes vs 9+ unfused).
+  ssm_apply   — fused shared-mask application: one |dW|>=tau compare drives
+                the masking of all three delta streams (6 reads, 3 writes).
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.fused_adam import ops, ref  # noqa: F401

@@ -1,0 +1,66 @@
+"""Fused Adam update kernel (the paper's Eqs. 3-5) — one VMEM round-trip.
+
+Unfused, each local epoch reads w,g,m,v and writes w,m,v through separate
+HLO ops with f32 temporaries (the memory-roofline term of local training).
+The kernel streams (8, 1024) tiles: per tile 4 loads + 3 stores, all
+arithmetic in VREGs at f32.
+
+Scalars (lr_eff, beta1, beta2, eps_eff) arrive via scalar prefetch (SMEM);
+bias correction is folded into lr_eff/eps_eff by the ops.py wrapper:
+
+    upd = m_hat / sqrt(v_hat + eps)
+        = m * [sqrt(1-b2^t)/(1-b1^t)] / sqrt(v + eps*(1-b2^t))
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 1024          # block minor dim (multiple of 128)
+SUBLANES = 8          # block major dim (f32 tile height)
+BLOCK = (SUBLANES, LANES)
+
+
+def _kernel(s_ref, w_ref, g_ref, m_ref, v_ref, wo_ref, mo_ref, vo_ref):
+    lr = s_ref[0]
+    b1 = s_ref[1]
+    b2 = s_ref[2]
+    eps = s_ref[3]
+    g = g_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...].astype(jnp.float32) + (1.0 - b1) * g
+    v = b2 * v_ref[...].astype(jnp.float32) + (1.0 - b2) * g * g
+    upd = m * jax.lax.rsqrt(v + eps)
+    wo_ref[...] = (w_ref[...].astype(jnp.float32) - lr * upd) \
+        .astype(wo_ref.dtype)
+    mo_ref[...] = m.astype(mo_ref.dtype)
+    vo_ref[...] = v.astype(vo_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_adam_2d(scalars, w, g, m, v, *, interpret: bool = True):
+    """w/g/m/v: (R, LANES) with R % SUBLANES == 0; scalars: f32[4] =
+    [lr_eff, beta1, beta2, eps_eff].  Returns (w', m', v')."""
+    R = w.shape[0]
+    grid = (R // SUBLANES,)
+    # index_map receives (grid indices..., scalar_ref) under scalar prefetch
+    spec = pl.BlockSpec(BLOCK, lambda i, s: (i, 0))
+    out_shape = (
+        jax.ShapeDtypeStruct(w.shape, w.dtype),
+        jax.ShapeDtypeStruct(m.shape, m.dtype),
+        jax.ShapeDtypeStruct(v.shape, v.dtype),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec, spec, spec, spec],
+            out_specs=(spec, spec, spec),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scalars, w, g, m, v)

@@ -1,0 +1,52 @@
+"""jit'd dispatch wrapper: arbitrary-shape pytree leaves -> 2D tiles ->
+kernel; falls back to the jnp reference for tiny tensors where padding
+overhead dominates.  interpret=True automatically off-TPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_adam.fused_adam import (
+    BLOCK, LANES, SUBLANES, fused_adam_2d)
+from repro.kernels.fused_adam.ref import fused_adam_ref
+
+_MIN_KERNEL_ELEMS = SUBLANES * LANES
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _effective_scalars(h, count):
+    """Fold bias correction into (lr_eff, eps_eff) — see kernel docstring."""
+    lr = jnp.asarray(h.lr, jnp.float32)
+    eps = jnp.asarray(h.eps, jnp.float32)
+    if h.bias_correction:
+        t = count.astype(jnp.float32) + 1.0
+        c2 = 1.0 - h.beta2 ** t
+        c1 = 1.0 - h.beta1 ** t
+        lr = lr * jnp.sqrt(c2) / c1
+        eps = eps * c2
+    return jnp.stack([lr, jnp.asarray(h.beta1, jnp.float32),
+                      jnp.asarray(h.beta2, jnp.float32), eps])
+
+
+def fused_adam(w, g, m, v, h, count):
+    """Drop-in replacement for optim.adam._adam_leaf (kernel path).
+
+    NOTE on bias correction: the kernel computes the *uncorrected* m/v and
+    folds correction into lr/eps, so the returned moments match the paper's
+    Eqs. (4)-(5) exactly (as does the jnp path)."""
+    scalars = _effective_scalars(h, count)
+    n = w.size
+    if n < _MIN_KERNEL_ELEMS:
+        return fused_adam_ref(scalars, w, g, m, v)
+    pad = (-n) % _MIN_KERNEL_ELEMS
+    prep = lambda x: jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, LANES)
+    w2, g2, m2, v2 = prep(w), prep(g), prep(m), prep(v)
+    wo, mo, vo = fused_adam_2d(scalars, w2, g2, m2, v2,
+                               interpret=_interpret())
+    unprep = lambda x2, like: x2.reshape(-1)[:n].reshape(like.shape)
+    return unprep(wo, w), unprep(mo, m), unprep(vo, v)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused_adam kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_adam_ref(scalars, w, g, m, v):
+    """Identical math to the kernel, unfused.  scalars = f32[4]
+    (lr_eff, b1, b2, eps_eff)."""
+    lr, b1, b2, eps = scalars[0], scalars[1], scalars[2], scalars[3]
+    gf = g.astype(jnp.float32)
+    mf = b1 * m.astype(jnp.float32) + (1.0 - b1) * gf
+    vf = b2 * v.astype(jnp.float32) + (1.0 - b2) * gf * gf
+    upd = mf * jax.lax.rsqrt(vf + eps)
+    w_new = (w.astype(jnp.float32) - lr * upd).astype(w.dtype)
+    return w_new, mf.astype(m.dtype), vf.astype(v.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.ssm_apply import ops, ref  # noqa: F401

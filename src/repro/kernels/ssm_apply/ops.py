@@ -1,0 +1,31 @@
+"""Wrapper: arbitrary shapes -> tiles -> fused mask-apply; combined with
+topk_mask.ops this is the full kernel-path sparsification:
+
+    mask, tau, _ = topk_mask_kernel(dW, k)
+    sW, sM, sV   = ssm_apply(tau, dW, dM, dV)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_apply.ref import ssm_apply_ref
+from repro.kernels.ssm_apply.ssm_apply import LANES, SUBLANES, ssm_apply_2d
+
+_TILE = SUBLANES * LANES
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssm_apply(tau, dw, dm, dv):
+    n = dw.size
+    if n < _TILE:
+        return ssm_apply_ref(tau, dw, dm, dv)
+    pad = (-n) % _TILE
+    prep = lambda x: jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, LANES)
+    wo, mo, vo = ssm_apply_2d(tau, prep(dw), prep(dm), prep(dv),
+                              interpret=_interpret())
+    unprep = lambda x2, like: x2.reshape(-1)[:n].reshape(like.shape)
+    return unprep(wo, dw), unprep(mo, dm), unprep(vo, dv)

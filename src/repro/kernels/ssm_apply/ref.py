@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for ssm_apply."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssm_apply_ref(tau, dw, dm, dv):
+    keep = jnp.abs(dw.astype(jnp.float32)) >= tau
+    z = jnp.zeros((), dw.dtype)
+    return (jnp.where(keep, dw, z),
+            jnp.where(keep, dm, z.astype(dm.dtype)),
+            jnp.where(keep, dv, z.astype(dv.dtype)))

@@ -1,0 +1,46 @@
+"""Fused shared-sparse-mask application (Algorithm 2 line 10).
+
+Given the shared threshold tau (from topk_mask over |dW|), produce the three
+sparse deltas in ONE streaming pass: a single |dW| >= tau compare drives all
+three selects — 3 loads + 3 stores per tile instead of three separate
+masked-select ops each re-reading dW for the mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 1024
+SUBLANES = 8
+BLOCK = (SUBLANES, LANES)
+
+
+def _kernel(tau_ref, w_ref, m_ref, v_ref, wo_ref, mo_ref, vo_ref):
+    keep = jnp.abs(w_ref[...].astype(jnp.float32)) >= tau_ref[0]
+    zero = jnp.zeros((), wo_ref.dtype)
+    wo_ref[...] = jnp.where(keep, w_ref[...], zero)
+    mo_ref[...] = jnp.where(keep, m_ref[...], zero.astype(mo_ref.dtype))
+    vo_ref[...] = jnp.where(keep, v_ref[...], zero.astype(vo_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssm_apply_2d(tau, dw, dm, dv, *, interpret: bool = True):
+    grid = (dw.shape[0] // SUBLANES,)
+    spec = pl.BlockSpec(BLOCK, lambda i, s: (i, 0))
+    out_shape = tuple(jax.ShapeDtypeStruct(t.shape, t.dtype)
+                      for t in (dw, dm, dv))
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec, spec, spec],
+            out_specs=(spec, spec, spec),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(jnp.asarray([tau], jnp.float32), dw, dm, dv)

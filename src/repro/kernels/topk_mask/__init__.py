@@ -1,0 +1,1 @@
+from repro.kernels.topk_mask import ops, ref  # noqa: F401

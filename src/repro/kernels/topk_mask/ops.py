@@ -1,0 +1,48 @@
+"""jit'd wrapper: 3-pass streaming threshold top-k mask.
+
+Returns (mask, tau, achieved_count).  Count semantics: >= k, over-selecting
+by at most one refinement bin (<=3% of k worst case); ties at tau share the
+mask.  Precision note: per-tile counts are f32 (exact to 2^24 per tile —
+tiles are 8192 elements, so exact), and the cross-tile accumulation is an
+f32 add chain whose error is << 1 count for d <= 2^40.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_mask.topk_mask import (
+    LANES, SUBLANES, N_BINS, absmax_2d, apply_mask_2d, count_ge_2d)
+from repro.kernels.topk_mask.ref import linear_taus, log2_taus
+
+_TILE = SUBLANES * LANES
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def topk_mask_kernel(x, k: int):
+    """x: any shape; k: static int.  Returns (mask bool, tau, count)."""
+    n = x.size
+    pad = (-n) % _TILE
+    flat = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, LANES)
+    interp = _interpret()
+
+    absmax = absmax_2d(flat, interpret=interp)
+    taus1 = log2_taus(absmax)
+    counts1 = count_ge_2d(taus1, flat, interpret=interp)
+    # padding contributes |0| >= tau counts only at tau == 0; taus > 0 here
+    idx = jnp.argmax(counts1 >= k)
+    hi = jnp.where(idx > 0, taus1[idx - 1], absmax)
+    lo = taus1[idx]
+    taus2 = linear_taus(lo, hi)
+    counts2 = count_ge_2d(taus2, flat, interpret=interp)
+    idx2 = jnp.argmax(counts2 >= k)
+    tau = taus2[idx2]
+    tau = jnp.where(k >= n, jnp.zeros((), jnp.float32), tau)
+    count = counts2[idx2]
+
+    mask = apply_mask_2d(tau, flat, interpret=interp)
+    mask = mask.reshape(-1)[:n].reshape(x.shape).astype(bool)
+    return mask, tau, count

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the topk_mask kernel: identical 2-level
+(log2 histogram -> linear refine) threshold selection, plus the exact
+sort-based mask for accuracy assertions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.topk_mask.topk_mask import N_BINS
+
+
+def log2_taus(absmax):
+    j = jnp.arange(N_BINS, dtype=jnp.float32)
+    return absmax * 2.0 ** (-j / 2.0)
+
+
+def linear_taus(lo, hi):
+    j = jnp.arange(N_BINS, dtype=jnp.float32)
+    return hi - (hi - lo) * j / (N_BINS - 1)
+
+
+def select_tau_ref(x, k):
+    """Same selection logic as ops.topk_mask_kernel, in pure jnp."""
+    a = jnp.abs(x.reshape(-1).astype(jnp.float32))
+    absmax = jnp.max(a)
+    taus1 = log2_taus(absmax)
+    counts1 = jnp.sum(a[None, :] >= taus1[:, None], axis=1) \
+        .astype(jnp.float32)
+    # first candidate with count >= k (taus descend; counts ascend)
+    idx = jnp.argmax(counts1 >= k)
+    hi = jnp.where(idx > 0, taus1[idx - 1], absmax)
+    lo = taus1[idx]
+    taus2 = linear_taus(lo, hi)
+    counts2 = jnp.sum(a[None, :] >= taus2[:, None], axis=1) \
+        .astype(jnp.float32)
+    idx2 = jnp.argmax(counts2 >= k)
+    tau = taus2[idx2]
+    # degenerate guard: k >= n keeps everything
+    return jnp.where(k >= a.size, jnp.zeros((), jnp.float32), tau)
+
+
+def topk_mask_ref(x, k):
+    tau = select_tau_ref(x, k)
+    return jnp.abs(x.astype(jnp.float32)) >= tau
+
+
+def topk_mask_exact(x, k):
+    """Sort-based exact mask (accuracy yardstick)."""
+    flat = jnp.abs(x.reshape(-1))
+    _, idx = lax.top_k(flat, k)
+    m = jnp.zeros(flat.shape, bool).at[idx].set(True)
+    return m.reshape(x.shape)

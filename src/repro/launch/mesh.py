@@ -1,0 +1,23 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import and then calls these.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Tiny mesh for CPU integration tests (requires
+    --xla_force_host_platform_device_count>=8 in the test process)."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,90 @@
+"""Serving driver: batched prefill + decode for any zoo architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch mamba2-1-3b --smoke --batch 2 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.data import synthetic_tokens, synthetic_frontend_embeds
+from repro.models import (cache_meta, decode_step, init_params, materialize,
+                          prefill)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(synthetic_tokens(args.batch, args.prompt_len,
+                                        cfg.vocab_size, seed=0))
+    kw = {}
+    if cfg.stub_frontend:
+        n_front = cfg.encoder.src_len if cfg.encoder is not None else \
+            min(cfg.stub_frontend_tokens, 16)
+        kw["frontend_embeds"] = jnp.asarray(
+            synthetic_frontend_embeds(args.batch, n_front, cfg.d_model))
+
+    seq_len = args.prompt_len + args.gen + \
+        (0 if cfg.encoder is not None else
+         (kw["frontend_embeds"].shape[1] if kw else 0))
+
+    # prefill builds full-seq caches at prompt length; for the demo we use
+    # the simpler decode-from-scratch path: replay the prompt through
+    # decode_step (prefill output validated against it in tests).
+    caches = materialize(cache_meta(cfg, args.batch, seq_len),
+                         jax.random.PRNGKey(1))
+    step = jax.jit(functools.partial(decode_step, cfg, seq_len=seq_len),
+                   donate_argnums=(1,))
+
+    t0 = time.time()
+    pos = 0
+    logits = None
+    for i in range(args.prompt_len):
+        logits, caches = step(params, caches, jnp.int32(pos), toks[:, i])
+        pos += 1
+    t_prefill = time.time() - t0
+
+    out_tokens = []
+    key = jax.random.PRNGKey(2)
+    t0 = time.time()
+    for i in range(args.gen):
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits / args.temperature, -1)
+        else:
+            nxt = jnp.argmax(logits, -1)
+        nxt = jnp.minimum(nxt, cfg.vocab_size - 1).astype(jnp.int32)
+        out_tokens.append(np.asarray(nxt))
+        logits, caches = step(params, caches, jnp.int32(pos), nxt)
+        pos += 1
+    t_gen = time.time() - t0
+
+    out = np.stack(out_tokens, 1)
+    print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"[serve] prompt replay {t_prefill:.2f}s, "
+          f"decode {t_gen:.2f}s ({args.gen*args.batch/max(t_gen,1e-9):.1f} tok/s)")
+    print("[serve] sample:", out[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,291 @@
+"""Build jit-able train / prefill / serve steps for (arch x shape x mesh).
+
+Every builder returns a ``StepBundle``: the python callable, example
+``ShapeDtypeStruct`` arguments (no allocation) and the matching
+in/out shardings — exactly what the dry-run lowers and what the real
+launcher feeds with data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+from repro.configs.base import ArchConfig
+from repro.core.fed import FedConfig, FedState, make_fl_round
+from repro.models import model as M
+from repro.models import params as PM
+from repro.optim.adam import AdamHyper
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode | long
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "long"),
+}
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    args_sds: Tuple[Any, ...]            # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    static: Dict[str, Any]               # bookkeeping for the roofline
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _axes_size(mesh, axes) -> int:
+    return int(math.prod(mesh.shape[a] for a in axes))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _front_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Stub-frontend token budget within the sequence."""
+    if cfg.encoder is not None:
+        return cfg.encoder.src_len
+    if cfg.stub_frontend:
+        return min(cfg.stub_frontend_tokens, max(seq_len // 2, 16))
+    return 0
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    if shape.kind == "long" and not cfg.supports_long_decode():
+        if cfg.encoder is not None:
+            return ("decoder positional capacity is 448 tokens by family "
+                    "design — 500k decode is not a meaningful configuration")
+        return ("pure full-attention family without a shipped sliding-window "
+                "variant — 500k decode skipped per DESIGN.md section 6")
+    return None
+
+
+
+def _loop_trips(cfg: ArchConfig, kind: str, *, local_epochs: int = 1,
+                n_virtual: int = 1, chunk: int = 1024,
+                kv_len: int = 0) -> tuple:
+    """Static scan-nesting trip counts, outermost first, used to scale
+    collective bytes parsed from loop bodies (see roofline.collective_bytes)."""
+    from repro.models.model import pattern_groups
+    maxgroup = max(c for _, c in pattern_groups(cfg))
+    chunks = max(1, kv_len // chunk)
+    if kind == "train":
+        lead = ([n_virtual] if n_virtual > 1 else []) + [local_epochs]
+        return tuple(lead + [cfg.pattern_repeats, maxgroup, chunks])
+    if kind == "prefill":
+        return (cfg.pattern_repeats, maxgroup, chunks)
+    return (cfg.pattern_repeats, maxgroup)
+
+
+# ---------------------------------------------------------------------------
+# Train step (one FL round)
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
+                     algorithm: str = "fedadam_ssm", alpha: float = 0.05,
+                     local_epochs: int = 2, remat: str = "full",
+                     aggregate: Optional[str] = None,
+                     plan: Optional[shd.DeployPlan] = None,
+                     lr: float = 1e-3) -> StepBundle:
+    multi_pod = "pod" in mesh.shape
+    plan = plan or shd.plan_for(cfg.name)
+    caxes = shd.client_axes(multi_pod)
+
+    if plan.clients == "spatial":
+        n_clients = _axes_size(mesh, caxes)
+        client_mode = "vmap"
+        if aggregate is None:
+            aggregate = ("sparse_gather"
+                         if algorithm in ("fedadam_ssm", "ssm_m", "ssm_v",
+                                          "fairness_top", "fedadam_top")
+                         else "dense")
+        per_client = max(1, shape.global_batch // n_clients)
+        batch_lead = (n_clients, per_client)
+        tok_spec = P(caxes if len(caxes) > 1 else caxes[0], None, None)
+        emb_spec = P(caxes if len(caxes) > 1 else caxes[0], None, None, None)
+    else:
+        n_clients = plan.n_virtual
+        client_mode = "scan"
+        aggregate = aggregate or "dense"
+        batch_lead = (n_clients, shape.global_batch)
+        bax = caxes if len(caxes) > 1 else caxes[0]
+        tok_spec = P(None, bax, None)
+        emb_spec = P(None, bax, None, None)
+
+    fed = FedConfig(
+        algorithm=algorithm, alpha=alpha, local_epochs=local_epochs,
+        n_clients=n_clients, adam=AdamHyper(lr=lr),
+        client_mode=client_mode, aggregate=aggregate,
+        # production masks: O(d) threshold bisection (the topk_mask kernel
+        # path) — sort-based exact top-k is the small-model/test path
+        exact_topk=False, mask_scope="per_tensor",
+        client_axes=(caxes if client_mode == "vmap" else None))
+
+    n_front = _front_len(cfg, shape.seq_len)
+    text_len = shape.seq_len - (n_front if cfg.encoder is None else 0)
+    text_len = max(text_len, 32)
+
+    def loss(params, batch):
+        return M.loss_fn(cfg, params, batch["tokens"],
+                         frontend_embeds=batch.get("embeds"),
+                         remat=remat)
+
+    # --- specs ---------------------------------------------------------
+    meta = M.abstract_params(cfg)
+    prules = shd.param_rules(plan.train_params, multi_pod)
+    pspec = PM.pspecs(meta, prules, mesh)
+    psds = PM.abstract(meta, cfg.dtype)
+
+    sparse_agg = None
+    if fed.client_mode == "vmap" and fed.aggregate == "sparse_gather":
+        from repro.core.aggregate import make_shardmap_sparse_aggregate
+        sparse_agg = make_shardmap_sparse_aggregate(
+            mesh, pspec, caxes, alpha,
+            shared=(algorithm != "fedadam_top"))
+
+    round_fn = make_fl_round(fed, loss, sparse_aggregate_fn=sparse_agg)
+
+    def train_step(state, batch):
+        return round_fn(state, batch)
+
+    state_sds = FedState(W=psds, M=psds, V=psds,
+                         round=_sds((), jnp.int32), client_state=None)
+    state_spec = FedState(W=pspec, M=pspec, V=pspec, round=P(),
+                          client_state=None)
+
+    batch_sds = {"tokens": _sds(batch_lead + (text_len,), jnp.int32)}
+    batch_spec = {"tokens": tok_spec}
+    if n_front:
+        batch_sds["embeds"] = _sds(batch_lead + (n_front, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+        batch_spec["embeds"] = emb_spec
+
+    out_shardings = (state_spec, None)
+    return StepBundle(
+        fn=train_step,
+        args_sds=(state_sds, batch_sds),
+        in_shardings=(state_spec, batch_spec),
+        out_shardings=out_shardings,
+        static=dict(kind="train", n_clients=n_clients, plan=plan,
+                    fed=fed, text_len=text_len, n_front=n_front,
+                    loop_trips=_loop_trips(
+                        cfg, "train", local_epochs=local_epochs,
+                        n_virtual=(n_clients if client_mode == "scan" else 1),
+                        kv_len=shape.seq_len)),
+        donate_argnums=(0,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill step
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
+                       plan: Optional[shd.DeployPlan] = None) -> StepBundle:
+    multi_pod = "pod" in mesh.shape
+    plan = plan or shd.plan_for(cfg.name)
+    caxes = shd.client_axes(multi_pod)
+    bax = caxes if len(caxes) > 1 else caxes[0]
+
+    n_front = _front_len(cfg, shape.seq_len)
+    text_len = shape.seq_len - (n_front if cfg.encoder is None else 0)
+    text_len = max(text_len, 32)
+
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch["tokens"],
+                         frontend_embeds=batch.get("embeds"))
+
+    meta = M.abstract_params(cfg)
+    prules = shd.param_rules(plan.serve_params, multi_pod)
+    pspec = PM.pspecs(meta, prules, mesh)
+    psds = PM.abstract(meta, cfg.dtype)
+
+    b = shape.global_batch
+    batch_sds = {"tokens": _sds((b, text_len), jnp.int32)}
+    batch_spec = {"tokens": P(bax, None)}
+    if n_front:
+        batch_sds["embeds"] = _sds((b, n_front, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+        batch_spec["embeds"] = P(bax, None, None)
+
+    return StepBundle(
+        fn=prefill_step,
+        args_sds=(psds, batch_sds),
+        in_shardings=(pspec, batch_spec),
+        out_shardings=None,
+        static=dict(kind="prefill", plan=plan, text_len=text_len,
+                    n_front=n_front,
+                    loop_trips=_loop_trips(cfg, "prefill",
+                                           kv_len=shape.seq_len)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serve (decode) step
+# ---------------------------------------------------------------------------
+
+
+def build_serve_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
+                     plan: Optional[shd.DeployPlan] = None,
+                     cache_seq_shard=None) -> StepBundle:
+    multi_pod = "pod" in mesh.shape
+    plan = plan or shd.plan_for(cfg.name)
+    long_mode = shape.kind == "long"
+    caxes = shd.client_axes(multi_pod)
+    bax = caxes if len(caxes) > 1 else caxes[0]
+
+    b = shape.global_batch
+
+    def serve_step(params, caches, pos, token):
+        return M.decode_step(cfg, params, caches, pos, token,
+                             seq_len=shape.seq_len, long_mode=long_mode)
+
+    meta = M.abstract_params(cfg)
+    prules = shd.param_rules(plan.serve_params, multi_pod)
+    pspec = PM.pspecs(meta, prules, mesh)
+    psds = PM.abstract(meta, cfg.dtype)
+
+    cmeta = M.cache_meta(cfg, b, shape.seq_len, long_mode)
+    crules = shd.cache_rules("long" if long_mode else "decode", multi_pod,
+                             cache_seq_shard=cache_seq_shard)
+    cspec = PM.pspecs(cmeta, crules, mesh)
+    csds = PM.abstract(cmeta, cfg.dtype)
+
+    tok_spec = P(None) if long_mode else P(bax)
+
+    return StepBundle(
+        fn=serve_step,
+        args_sds=(psds, csds, _sds((), jnp.int32), _sds((b,), jnp.int32)),
+        in_shardings=(pspec, cspec, P(), tok_spec),
+        out_shardings=(None, cspec),
+        static=dict(kind="long" if long_mode else "decode", plan=plan,
+                    loop_trips=_loop_trips(cfg, "decode")),
+        donate_argnums=(1,),
+    )
+
+
+def build_step(cfg: ArchConfig, mesh, shape_name: str, **kw) -> StepBundle:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, **kw)
+    return build_serve_step(cfg, mesh, shape, **kw)

@@ -1,0 +1,19 @@
+from repro.models.model import (  # noqa: F401
+    abstract_params,
+    abstract_params_sds,
+    cache_meta,
+    decode_layout,
+    decode_step,
+    forward,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.params import (  # noqa: F401
+    P,
+    abstract,
+    count_params,
+    materialize,
+    pspecs,
+    stack_tree,
+)

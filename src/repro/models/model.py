@@ -1,0 +1,413 @@
+"""Stack builder: ArchConfig -> parameters + train / prefill / decode fns.
+
+Layout: the repeating ``layer_pattern`` is first coalesced into GROUPS of
+consecutive identical LayerSpecs; parameters are stacked
+(pattern_repeats, group_count, ...) and the forward pass is an outer
+``lax.scan`` over repeats with an inner ``lax.scan`` over each group — the
+lowered HLO is O(#distinct groups), not O(num_layers).  (Gemma-3's
+5-local:1-global pattern lowers as 2 group bodies instead of 31 inlined
+layers.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import layers as L
+from repro.models.params import P, abstract, materialize, stack_tree
+
+_F32 = jnp.float32
+
+
+def pattern_groups(cfg: ArchConfig) -> List[Tuple[LayerSpec, int]]:
+    """Coalesce consecutive identical LayerSpecs into (spec, count) runs."""
+    groups: List[Tuple[LayerSpec, int]] = []
+    for spec in cfg.layer_pattern:
+        if groups and groups[-1][0] == spec:
+            groups[-1] = (spec, groups[-1][1] + 1)
+        else:
+            groups.append((spec, 1))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _block_params(cfg: ArchConfig, spec: LayerSpec) -> Dict[str, Any]:
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm_mixer": L.rmsnorm_params(d)}
+    if spec.kind == "attn":
+        p["mixer"] = L.attention_params(d, spec.attention)
+        if cfg.encoder is not None:
+            p["cross"] = L.attention_params(
+                d, dataclasses.replace(spec.attention, window=None))
+            p["norm_cross"] = L.rmsnorm_params(d)
+    else:
+        p["mixer"] = L.ssm_params(d, spec.ssm)
+    if spec.d_ff:
+        p["norm_ffn"] = L.rmsnorm_params(d)
+        p["ffn"] = L.mlp_params(d, spec.d_ff, spec.gated_mlp)
+    elif spec.moe:
+        p["norm_ffn"] = L.rmsnorm_params(d)
+        p["ffn"] = L.moe_params(d, spec.moe)
+    return p
+
+
+def abstract_params(cfg: ArchConfig):
+    d = cfg.d_model
+    tree: Dict[str, Any] = {
+        "embed": P((cfg.padded_vocab, d), ("vocab", "embed")),
+        "blocks": tuple(
+            stack_tree(stack_tree(_block_params(cfg, spec), count),
+                       cfg.pattern_repeats)
+            for spec, count in pattern_groups(cfg)),
+        "final_norm": L.rmsnorm_params(d),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = P((d, cfg.padded_vocab), ("embed", "vocab"),
+                            init="scaled", fan_in=d)
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        enc_attn = dataclasses.replace(
+            cfg.layer_pattern[0].attention, window=None, causal=False)
+        enc_block = {
+            "norm_mixer": L.rmsnorm_params(d),
+            "mixer": L.attention_params(d, enc_attn),
+            "norm_ffn": L.rmsnorm_params(d),
+            "ffn": L.mlp_params(d, 4 * d, gated=False),
+        }
+        tree["encoder"] = {
+            "blocks": stack_tree(enc_block, e.num_layers),
+            "final_norm": L.rmsnorm_params(d),
+        }
+    return tree
+
+
+def init_params(cfg: ArchConfig, key):
+    return materialize(abstract_params(cfg), key, cfg.dtype)
+
+
+def abstract_params_sds(cfg: ArchConfig):
+    return abstract(abstract_params(cfg), cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block forward (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd(cfg: ArchConfig, spec: LayerSpec, p, x, *, positions,
+               enc_out=None, window_override=None, chunk=1024,
+               collect_cache=False):
+    """Returns (x, aux, cache_entry)."""
+    h = L.rmsnorm(p["norm_mixer"], x, cfg.norm_eps)
+    cache_entry = {}
+    if spec.kind == "attn":
+        out, kv = L.attention_fwd(p["mixer"], spec.attention, h,
+                                  positions=positions,
+                                  window_override=window_override,
+                                  chunk=chunk)
+        if collect_cache:
+            if spec.attention.is_mla:
+                cache_entry["ckv"] = kv[0]
+            else:
+                cache_entry["k"], cache_entry["v"] = kv
+        x = x + out
+        if enc_out is not None and "cross" in p:
+            hc = L.rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+            out, _ = L.attention_fwd(p["cross"], spec.attention, hc,
+                                     positions=positions, kv=enc_out,
+                                     chunk=chunk)
+            x = x + out
+        if collect_cache and cfg.encoder is not None:
+            cache_entry["cross_k"] = jnp.einsum(
+                "bsd,dhk->bshk", enc_out, p["cross"]["wk"])
+            cache_entry["cross_v"] = jnp.einsum(
+                "bsd,dhk->bshk", enc_out, p["cross"]["wv"])
+    else:
+        out, ssm_cache = L.ssm_fwd(p["mixer"], spec.ssm, h,
+                                   norm_eps=cfg.norm_eps)
+        if collect_cache:
+            cache_entry = ssm_cache
+        x = x + out
+    aux = jnp.zeros((), _F32)
+    if spec.d_ff:
+        h = L.rmsnorm(p["norm_ffn"], x, cfg.norm_eps)
+        x = x + L.mlp_fwd(p["ffn"], h)
+    elif spec.moe:
+        h = L.rmsnorm(p["norm_ffn"], x, cfg.norm_eps)
+        out, aux = L.moe_fwd(p["ffn"], spec.moe, h)
+        x = x + out
+    return x, aux, cache_entry
+
+
+def _encoder_fwd(cfg: ArchConfig, enc_params, frames):
+    """frames: (b, src, d) precomputed frame embeddings (stub frontend)."""
+    d = cfg.d_model
+    src = frames.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(src), frames.shape[:2])
+    enc_attn = dataclasses.replace(
+        cfg.layer_pattern[0].attention, window=None)
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, p):
+        h = L.rmsnorm(p["norm_mixer"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["mixer"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, p["mixer"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, p["mixer"]["wv"])
+        q = L.rope(q, pos, enc_attn.rope_theta)
+        k = L.rope(k, pos, enc_attn.rope_theta)
+        b, s = x.shape[:2]
+        g = enc_attn.num_heads // enc_attn.num_kv_heads
+        qg = q.reshape(b, s, enc_attn.num_kv_heads, g, enc_attn.head_dim)
+        out = L.chunked_attention(qg, k, v, causal=False, chunk=s)
+        out = out.reshape(b, s, enc_attn.num_heads * enc_attn.head_dim)
+        wo = p["mixer"]["wo"].reshape(-1, d)
+        x = x + jnp.einsum("bsk,kd->bsd", out, wo)
+        hf = L.rmsnorm(p["norm_ffn"], x, cfg.norm_eps)
+        x = x + L.mlp_fwd(p["ffn"], hf)
+        return x, None
+
+    x, _ = lax.scan(body, x, enc_params["blocks"])
+    return L.rmsnorm(enc_params["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward
+# ---------------------------------------------------------------------------
+
+
+def _window_override(cfg: ArchConfig, spec: LayerSpec, long_mode: bool):
+    if long_mode and spec.kind == "attn" and spec.attention.window is None \
+            and cfg.long_strategy == "window_all" and cfg.long_context_window:
+        return cfg.long_context_window
+    return None
+
+
+def forward(cfg: ArchConfig, params, tokens, *, frontend_embeds=None,
+            remat: str = "full", chunk: int = 1024,
+            long_mode: bool = False):
+    """tokens: (b, s) int32.  frontend_embeds: (b, s_front, d) for stubbed
+    VLM/audio frontends (VLM: prepended to the token embeddings; audio:
+    encoder input).  Returns (logits, aux)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _encoder_fwd(cfg, params["encoder"], frontend_embeds)
+    elif cfg.stub_frontend and frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    groups = pattern_groups(cfg)
+
+    def body(carry, group_params):
+        x, aux = carry
+        for gi, (spec, _) in enumerate(groups):
+            wov = _window_override(cfg, spec, long_mode)
+
+            def inner(c2, p_one, spec=spec, wov=wov):
+                x2, a2 = c2
+                x2, a, _ = _block_fwd(cfg, spec, p_one, x2,
+                                      positions=positions, enc_out=enc_out,
+                                      window_override=wov, chunk=chunk)
+                return (x2, a2 + a), None
+
+            (x, aux), _ = lax.scan(inner, (x, aux), group_params[gi])
+        return (x, aux), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), _F32)), params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_head(cfg, params, x)
+    return logits, aux
+
+
+def _lm_head(cfg, params, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def loss_fn(cfg: ArchConfig, params, tokens, *, frontend_embeds=None,
+            remat: str = "full", chunk: int = 1024, aux_weight: float = 0.01):
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    logits, aux = forward(cfg, params, tokens,
+                          frontend_embeds=frontend_embeds,
+                          remat=remat, chunk=chunk)
+    n_front = 0
+    if cfg.stub_frontend and frontend_embeds is not None and cfg.encoder is None:
+        n_front = frontend_embeds.shape[1]
+    lg = logits[:, n_front:, :][:, :-1]
+    tgt = tokens[:, 1:]
+    lg = lg.astype(_F32)
+    lse = jax.nn.logsumexp(lg, -1)
+    picked = jnp.take_along_axis(lg, tgt[..., None], -1)[..., 0]
+    ce = jnp.mean(lse - picked)
+    return ce + aux_weight * aux
+
+
+def prefill(cfg: ArchConfig, params, tokens, *, frontend_embeds=None,
+            chunk: int = 1024):
+    """Inference prefill: full forward over the prompt, returning
+    (last_token_logits, caches); cache leaves are stacked
+    (repeats, group_count, ...) matching cache_meta's full-seq layout."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _encoder_fwd(cfg, params["encoder"], frontend_embeds)
+    elif cfg.stub_frontend and frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    groups = pattern_groups(cfg)
+
+    def body(x, group_params):
+        entries = []
+        for gi, (spec, _) in enumerate(groups):
+
+            def inner(x2, p_one, spec=spec):
+                x2, _, entry = _block_fwd(cfg, spec, p_one, x2,
+                                          positions=positions,
+                                          enc_out=enc_out, chunk=chunk,
+                                          collect_cache=True)
+                return x2, entry
+
+            x, group_entries = lax.scan(inner, x, group_params[gi])
+            entries.append(group_entries)
+        return x, tuple(entries)
+
+    x, caches = lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_head(cfg, params, x[:, -1:, :])[:, 0]
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def decode_layout(cfg: ArchConfig, seq_len: int, long_mode: bool):
+    """Static per-GROUP cache layout: (kind, ring, window_eff, cache_len)."""
+    out = []
+    for spec, _ in pattern_groups(cfg):
+        if spec.kind == "ssm":
+            out.append(("ssm", False, None, 0))
+            continue
+        window = spec.attention.window
+        if long_mode and window is None and cfg.long_strategy == "window_all" \
+                and cfg.long_context_window:
+            window = cfg.long_context_window
+        ring = window is not None and window < seq_len
+        cache_len = window if ring else seq_len
+        out.append(("attn", ring, window, cache_len))
+    return tuple(out)
+
+
+def _layer_cache_meta(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                      cache_len: int):
+    d = cfg.d_model
+    dt = cfg.dtype
+    if spec.kind == "ssm":
+        return L.ssm_cache(spec.ssm, d, batch, dt)
+    a = spec.attention
+    meta = L.attention_cache(a, batch, cache_len, dt)
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        meta["cross_k"] = P((batch, e.src_len, a.num_kv_heads, a.head_dim),
+                            ("batch", "enc_seq", "kv_heads", "head_dim"),
+                            init="zeros", dtype=dt)
+        meta["cross_v"] = P((batch, e.src_len, a.num_kv_heads, a.head_dim),
+                            ("batch", "enc_seq", "kv_heads", "head_dim"),
+                            init="zeros", dtype=dt)
+    return meta
+
+
+def cache_meta(cfg: ArchConfig, batch: int, seq_len: int,
+               long_mode: bool = False):
+    """Pytree of P describing the decode cache: tuple per group, leaves
+    stacked (pattern_repeats, group_count, ...)."""
+    layout = decode_layout(cfg, seq_len, long_mode)
+    out = []
+    for (spec, count), (_, _, _, cache_len) in zip(pattern_groups(cfg),
+                                                   layout):
+        m = _layer_cache_meta(cfg, spec, batch, cache_len)
+        out.append(stack_tree(stack_tree(m, count), cfg.pattern_repeats))
+    return tuple(out)
+
+
+def decode_step(cfg: ArchConfig, params, caches, pos, token, *,
+                seq_len: int, long_mode: bool = False):
+    """One decoding step.  caches per cache_meta; pos: scalar int32 (index
+    of the current token); token: (b,) int32.  Returns (logits, caches)."""
+    layout = decode_layout(cfg, seq_len, long_mode)
+    groups = pattern_groups(cfg)
+    x = jnp.take(params["embed"], token, axis=0)[:, None]  # (b, 1, d)
+    x = x.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, scanned):
+        block_p, cache = scanned
+        new_cache = []
+        for gi, (spec, _) in enumerate(groups):
+            _, ring, window_eff, _ = layout[gi]
+
+            def inner(x2, pc, spec=spec, ring=ring, window_eff=window_eff):
+                p, c = pc
+                h = L.rmsnorm(p["norm_mixer"], x2, cfg.norm_eps)
+                if spec.kind == "attn":
+                    a = spec.attention
+                    self_c = {k: v for k, v in c.items()
+                              if k in ("k", "v", "ckv")}
+                    out, nc = L.attention_decode(
+                        p["mixer"], a, h, self_c, pos=pos,
+                        window_override=window_eff, ring=ring)
+                    x2 = x2 + out
+                    if "cross_k" in c:
+                        hc = L.rmsnorm(p["norm_cross"], x2, cfg.norm_eps)
+                        g = a.num_heads // a.num_kv_heads
+                        q = jnp.einsum("bsd,dhk->bshk", hc,
+                                       p["cross"]["wq"])[:, 0]
+                        qg = q.reshape(q.shape[0], a.num_kv_heads, g,
+                                       a.head_dim)
+                        src = c["cross_k"].shape[1]
+                        outc = L.decode_attention(
+                            qg, c["cross_k"], c["cross_v"], pos=src - 1)
+                        outc = outc.reshape(x2.shape[0], 1, -1)
+                        wo = p["cross"]["wo"].reshape(-1, cfg.d_model)
+                        x2 = x2 + jnp.einsum("bsk,kd->bsd", outc, wo)
+                        nc = dict(nc, cross_k=c["cross_k"],
+                                  cross_v=c["cross_v"])
+                else:
+                    out, nc = L.ssm_decode(p["mixer"], spec.ssm, h, c,
+                                           norm_eps=cfg.norm_eps)
+                    x2 = x2 + out
+                if spec.d_ff:
+                    hf = L.rmsnorm(p["norm_ffn"], x2, cfg.norm_eps)
+                    x2 = x2 + L.mlp_fwd(p["ffn"], hf)
+                elif spec.moe:
+                    hf = L.rmsnorm(p["norm_ffn"], x2, cfg.norm_eps)
+                    out, _ = L.moe_fwd(p["ffn"], spec.moe, hf)
+                    x2 = x2 + out
+                return x2, nc
+
+            x, group_cache = lax.scan(inner, x, (block_p[gi], cache[gi]))
+            new_cache.append(group_cache)
+        return x, tuple(new_cache)
+
+    x, new_caches = lax.scan(body, x, (params["blocks"], caches))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _lm_head(cfg, params, x)[:, 0]
+    return logits, new_caches

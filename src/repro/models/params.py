@@ -1,0 +1,134 @@
+"""Parameter metadata: single source of truth for shapes, init and sharding.
+
+Model builders return pytrees whose leaves are :class:`P` — a declarative
+(shape, logical-axes, init) record.  From the same tree we derive
+
+* ``materialize(tree, key)``   → concrete arrays (CPU tests / examples),
+* ``abstract(tree)``           → ``jax.ShapeDtypeStruct`` stand-ins (dry-run),
+* ``pspecs(tree, rules)``      → ``PartitionSpec`` tree (pjit in_shardings),
+
+so shapes, initializers and sharding can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Declarative parameter: shape + logical axis names + init recipe."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]        # logical name per dim (or None)
+    init: str = "normal"                   # normal | zeros | ones | scaled
+    fan_in: Optional[int] = None           # for init="scaled": 1/sqrt(fan_in)
+    dtype: Optional[str] = None            # override model dtype (norms=f32)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def with_prefix(self, n: int, axis_name: str = "layers") -> "P":
+        """Stack this param n times along a new leading axis (scan layout)."""
+        return dataclasses.replace(
+            self, shape=(n,) + self.shape, axes=(axis_name,) + self.axes)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_meta(fn: Callable, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_meta)
+
+
+def stack_tree(tree, n: int):
+    """Add a leading `layers` axis of size n to every P in the tree."""
+    return tree_map_meta(lambda p: p.with_prefix(n), tree)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _init_one(p: P, key, default_dtype) -> jax.Array:
+    dtype = jnp.dtype(p.dtype or default_dtype)
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "scaled":
+        fan_in = p.fan_in or (p.shape[-2] if len(p.shape) >= 2 else p.shape[-1])
+        std = 1.0 / math.sqrt(max(1, fan_in))
+    else:
+        std = 0.02
+    return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+
+
+def materialize(tree, key, default_dtype="float32"):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_meta)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_one(p, k, default_dtype) for p, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract(tree, default_dtype="float32"):
+    def to_sds(p: P):
+        return jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype or default_dtype))
+    return tree_map_meta(to_sds, tree)
+
+
+def pspecs(tree, rules: dict, mesh=None):
+    """Map logical axes to mesh axes.
+
+    ``rules`` maps logical-axis-name -> mesh axis (str), tuple of mesh axes,
+    or None.  Unlisted logical axes are unsharded.  If two dims of one param
+    resolve to the same mesh axis, the later dim is left unsharded (a mesh
+    axis may appear at most once in a PartitionSpec).
+
+    With ``mesh`` given, a mapping is dropped (dim left replicated) when the
+    dim size is not divisible by the mesh-axis product — e.g. GQA kv_heads=8
+    cannot shard over a 16-way model axis, so the KV projections/cache stay
+    replicated (the standard GQA serving fallback).
+    """
+    sizes = dict(mesh.shape) if mesh is not None else {}
+
+    def spec_of(p: P) -> PartitionSpec:
+        used = set()
+        entries = []
+        for dim, name in zip(p.shape, p.axes):
+            mesh_axes = rules.get(name) if name else None
+            if mesh_axes is None:
+                entries.append(None)
+                continue
+            if isinstance(mesh_axes, str):
+                mesh_axes = (mesh_axes,)
+            free = tuple(a for a in mesh_axes if a not in used)
+            if not free:
+                entries.append(None)
+                continue
+            if sizes:
+                prod = 1
+                for a in free:
+                    prod *= sizes[a]
+                if dim % prod:
+                    entries.append(None)
+                    continue
+            used.update(free)
+            entries.append(free[0] if len(free) == 1 else free)
+        return PartitionSpec(*entries)
+
+    return tree_map_meta(spec_of, tree)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_meta)
+    total = 0
+    for leaf in leaves:
+        shape = leaf.shape
+        total += int(math.prod(shape)) if shape else 1
+    return total

@@ -1,0 +1,184 @@
+"""The paper's experimental models (Section VII): CNN (Fashion-MNIST),
+VGG-11 (CIFAR-10), ResNet-18 (SVHN) — pure-JAX, pytree-native, with a
+``width`` multiplier so the CPU benchmark harness can run reduced variants.
+
+These are the models the paper's tables/figures are produced on; the
+transformer zoo handles the assigned at-scale architectures.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.params import P, materialize
+
+_F32 = jnp.float32
+
+
+def _conv_p(kh, kw, cin, cout):
+    return P((kh, kw, cin, cout), (None, None, None, None),
+             init="scaled", fan_in=kh * kw * cin)
+
+
+def _dense_p(cin, cout):
+    return P((cin, cout), (None, None), init="scaled", fan_in=cin)
+
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _maxpool(x, k=2):
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, k, k, 1),
+                             (1, k, k, 1), "VALID")
+
+
+def _avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# CNN (paper: 2x conv5x5 + 2 FC, Fashion-MNIST)
+# ---------------------------------------------------------------------------
+
+
+def cnn_params(in_shape=(28, 28, 1), n_classes=10, width=1.0):
+    c1, c2, fc = int(32 * width), int(64 * width), int(128 * width)
+    h, w, cin = in_shape
+    h2, w2 = h // 4, w // 4
+    return {
+        "conv1": _conv_p(5, 5, cin, c1),
+        "conv2": _conv_p(5, 5, c1, c2),
+        "fc1": _dense_p(h2 * w2 * c2, fc),
+        "fc2": _dense_p(fc, n_classes),
+    }
+
+
+def cnn_fwd(p, x):
+    x = jax.nn.relu(_conv(x, p["conv1"]))
+    x = _maxpool(x)
+    x = jax.nn.relu(_conv(x, p["conv2"]))
+    x = _maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ p["fc1"])
+    return x @ p["fc2"]
+
+
+# ---------------------------------------------------------------------------
+# VGG-11 (paper: CIFAR-10)
+# ---------------------------------------------------------------------------
+
+_VGG11 = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+
+
+def vgg11_params(in_shape=(32, 32, 3), n_classes=10, width=1.0):
+    params = {}
+    cin = in_shape[2]
+    i = 0
+    for item in _VGG11:
+        if item == "M":
+            continue
+        cout = max(8, int(item * width))
+        params[f"conv{i}"] = _conv_p(3, 3, cin, cout)
+        cin = cout
+        i += 1
+    fc = max(16, int(512 * width))
+    params["fc1"] = _dense_p(cin, fc)
+    params["fc2"] = _dense_p(fc, fc)
+    params["fc3"] = _dense_p(fc, n_classes)
+    return params
+
+
+def vgg11_fwd(p, x):
+    i = 0
+    for item in _VGG11:
+        if item == "M":
+            x = _maxpool(x)
+        else:
+            x = jax.nn.relu(_conv(x, p[f"conv{i}"]))
+            i += 1
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ p["fc1"])
+    x = jax.nn.relu(x @ p["fc2"])
+    return x @ p["fc3"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (paper: SVHN)
+# ---------------------------------------------------------------------------
+
+
+def resnet18_params(in_shape=(32, 32, 3), n_classes=10, width=1.0):
+    w64 = max(8, int(64 * width))
+    chans = [w64, w64 * 2, w64 * 4, w64 * 8]
+    params = {"stem": _conv_p(3, 3, in_shape[2], w64)}
+    cin = w64
+    for s, cout in enumerate(chans):
+        for b in range(2):
+            pref = f"s{s}b{b}"
+            params[pref + "_c1"] = _conv_p(3, 3, cin, cout)
+            params[pref + "_c2"] = _conv_p(3, 3, cout, cout)
+            if cin != cout:
+                params[pref + "_proj"] = _conv_p(1, 1, cin, cout)
+            cin = cout
+    params["fc"] = _dense_p(cin, n_classes)
+    return params
+
+
+def resnet18_fwd(p, x):
+    x = jax.nn.relu(_conv(x, p["stem"]))
+    cin = p["stem"].shape[-1]
+    s = 0
+    for s in range(4):
+        for b in range(2):
+            pref = f"s{s}b{b}"
+            stride = 2 if (s > 0 and b == 0) else 1
+            h = jax.nn.relu(_conv(x, p[pref + "_c1"], stride=stride))
+            h = _conv(h, p[pref + "_c2"])
+            sc = x
+            if pref + "_proj" in p:
+                sc = _conv(x, p[pref + "_proj"], stride=stride)
+            x = jax.nn.relu(h + sc)
+    x = _avgpool_global(x)
+    return x @ p["fc"]
+
+
+# ---------------------------------------------------------------------------
+
+
+MODELS = {
+    "cnn": (cnn_params, cnn_fwd, "fashion_mnist"),
+    "vgg11": (vgg11_params, vgg11_fwd, "cifar10"),
+    "resnet18": (resnet18_params, resnet18_fwd, "svhn"),
+}
+
+
+def build_vision(name: str, width: float = 1.0, n_classes: int = 10,
+                 key=None):
+    mk, fwd, ds = MODELS[name]
+    in_shape = (28, 28, 1) if ds == "fashion_mnist" else (32, 32, 3)
+    meta = mk(in_shape=in_shape, n_classes=n_classes, width=width)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    params = materialize(meta, key, "float32")
+
+    def loss_fn(p, batch):
+        imgs, labels = batch
+        logits = fwd(p, imgs).astype(_F32)
+        lse = jax.nn.logsumexp(logits, -1)
+        picked = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32),
+                                     -1)[:, 0]
+        return jnp.mean(lse - picked)
+
+    def acc_fn(p, batch):
+        imgs, labels = batch
+        return jnp.mean((jnp.argmax(fwd(p, imgs), -1) == labels)
+                        .astype(_F32))
+
+    return params, fwd, loss_fn, acc_fn, ds

@@ -1,0 +1,7 @@
+from repro.optim.adam import (  # noqa: F401
+    AdamHyper,
+    adam_init,
+    adam_step,
+    sgd_step,
+)
+from repro.optim.schedules import constant, cosine, linear_warmup  # noqa: F401

@@ -1,0 +1,107 @@
+"""Pytree-native Adam / SGD.
+
+The paper's local update rule (Eqs. 3–5) is Adam *without* bias correction
+(the moments are aggregated across clients every round, so per-round bias
+correction would double-count; this matches Algorithm 1/2 in the paper).
+``bias_correction=True`` gives the textbook Adam for centralized training /
+comparisons.
+
+The update is elementwise — exactly the op the ``fused_adam`` Pallas kernel
+implements; ``adam_step(..., use_kernel=True)`` dispatches per-leaf to it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamHyper:
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-6          # the paper uses 1e-6 (inside the sqrt)
+    bias_correction: bool = False
+    weight_decay: float = 0.0
+
+
+class AdamState(NamedTuple):
+    m: Any                      # pytree like params
+    v: Any
+    count: jax.Array            # int32 scalar
+
+
+def adam_init(params, dtype: Optional[str] = None) -> AdamState:
+    def zero_like(x):
+        dt = jnp.dtype(dtype) if dtype else x.dtype
+        return jnp.zeros(x.shape, dt)
+
+    return AdamState(
+        m=jax.tree.map(zero_like, params),
+        v=jax.tree.map(zero_like, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def _adam_leaf(w, g, m, v, h: AdamHyper, count):
+    gf = g.astype(_F32)
+    mf = h.beta1 * m.astype(_F32) + (1.0 - h.beta1) * gf
+    vf = h.beta2 * v.astype(_F32) + (1.0 - h.beta2) * gf * gf
+    if h.bias_correction:
+        t = count.astype(_F32) + 1.0
+        m_hat = mf / (1.0 - h.beta1 ** t)
+        v_hat = vf / (1.0 - h.beta2 ** t)
+    else:
+        m_hat, v_hat = mf, vf
+    upd = m_hat / jnp.sqrt(v_hat + h.eps)       # paper: eps inside the sqrt
+    if h.weight_decay:
+        upd = upd + h.weight_decay * w.astype(_F32)
+    w_new = w.astype(_F32) - h.lr * upd
+    return (w_new.astype(w.dtype), mf.astype(m.dtype), vf.astype(v.dtype))
+
+
+def adam_step(params, grads, state: AdamState, h: AdamHyper,
+              use_kernel: bool = False):
+    """One Adam step.  Returns (new_params, new_state)."""
+    if use_kernel:
+        from repro.kernels.fused_adam import ops as fused
+
+        def leaf(w, g, m, v):
+            return fused.fused_adam(w, g, m, v, h, state.count)
+    else:
+        def leaf(w, g, m, v):
+            return _adam_leaf(w, g, m, v, h, state.count)
+
+    # flatten/unflatten explicitly: the params tree may itself contain
+    # tuples (e.g. the stacked `blocks` tuple), so tuple-as-leaf tricks
+    # would corrupt the structure.
+    pw, treedef = jax.tree_util.tree_flatten(params)
+    pg = treedef.flatten_up_to(grads)
+    pm = treedef.flatten_up_to(state.m)
+    pv = treedef.flatten_up_to(state.v)
+    outs = [leaf(w, g, m, v) for w, g, m, v in zip(pw, pg, pm, pv)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+    return new_p, AdamState(new_m, new_v, state.count + 1)
+
+
+def sgd_step(params, grads, lr: float, momentum_state=None, momentum=0.0):
+    """Vanilla / momentum SGD (FedSGD baseline)."""
+    if momentum and momentum_state is not None:
+        new_mom = jax.tree.map(
+            lambda b, g: momentum * b.astype(_F32) + g.astype(_F32),
+            momentum_state, grads)
+        new_p = jax.tree.map(
+            lambda w, b: (w.astype(_F32) - lr * b).astype(w.dtype),
+            params, new_mom)
+        return new_p, new_mom
+    new_p = jax.tree.map(
+        lambda w, g: (w.astype(_F32) - lr * g.astype(_F32)).astype(w.dtype),
+        params, grads)
+    return new_p, momentum_state

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (step -> lr multiplier)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        frac = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps))
+        return jnp.asarray(lr, jnp.float32) * frac
+    return fn
+
+
+def cosine(lr: float, total_steps: int, warmup_steps: int = 0,
+           final_frac: float = 0.1):
+    def fn(step):
+        warm = jnp.minimum(1.0, (step + 1) / max(1, warmup_steps or 1))
+        prog = jnp.clip((step - warmup_steps) /
+                        max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * warm * cos
+    return fn

@@ -1,0 +1,175 @@
+"""Roofline model: three terms from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / (chips * 197e12)            [bf16 v5e peak]
+    memory     = HLO_bytes / (chips * 819e9)             [HBM bandwidth]
+    collective = collective_bytes / (chips * 3 * 50e9)   [3 usable ICI links]
+
+``cost_analysis()`` provides FLOPs / bytes-accessed for the *whole program*
+(global view — we divide by chip count).  Collective bytes are NOT in
+cost_analysis: we parse the post-SPMD optimized HLO (``compiled.as_text()``)
+and sum the output-shape bytes of every collective op, classified by kind.
+
+Caveat (recorded with every row): XLA's CPU-backend cost analysis counts a
+``while`` body once; our steps scan over layer-repeats and local epochs, so
+we scale HLO FLOPs by the known static trip counts where XLA didn't
+(detected by comparing against the analytic floor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# v5e hardware constants (per chip) — per the brief
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+ICI_LINKS = 3                # usable links per chip in a 2D torus (approx)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "s4": 1, "u4": 1, "f8e4m3": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]?[a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape literal like 'bf16[16,1024]' ('' dims = scalar)."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nb = _DTYPE_BYTES.get(dt)
+    if nb is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nb
+
+
+def _line_result_bytes(line: str) -> int:
+    """Sum the bytes of the result shape(s) of an HLO instruction line:
+    ``%x = f32[8]{0} op(...)`` or tuple ``%x = (f32[8], s32[8]) op(...)``.
+    The shape literal(s) sit between '= ' and the op name."""
+    eq = line.find("= ")
+    if eq < 0:
+        return 0
+    rest = line[eq + 2:]
+    # cut at the op-name call site: first '(' that follows the shape part.
+    # Shapes may themselves contain '(' only in tuple form at the start.
+    if rest.startswith("("):
+        end = rest.find(")")
+        shapes = rest[1:end]
+    else:
+        shapes = rest.split(" ", 1)[0]
+    return sum(_shape_bytes(s.group(0)) for s in _SHAPE_RE.finditer(shapes))
+
+
+def _loop_depth(line: str) -> int:
+    """Nesting depth of the instruction = number of enclosing while loops,
+    read from the op_name metadata (jax scan bodies show as /while/body/)."""
+    m = re.search(r'op_name="([^"]*)"', line)
+    if not m:
+        return 0
+    return m.group(1).count("/while/body")
+
+
+def collective_bytes(hlo_text: str, loop_trips=()) -> Dict[str, int]:
+    """Per-collective-kind total result bytes in the optimized HLO.
+
+    ``loop_trips``: static trip counts of the scan nesting, outermost first
+    (e.g. train: [virtual_clients, local_epochs, repeats, group, chunks]).
+    A collective at while-nesting depth d is counted prod(loop_trips[:d])
+    times — XLA prints each loop body once.  Both raw (static) and
+    trip-scaled totals are returned.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    raw: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        head = ls.split("(")[0]
+        if "fusion" in head:
+            continue
+        for kind in _COLLECTIVES:
+            if re.search(rf"\b{kind}(-start)?\(", ls) and "= " in ls:
+                b = _line_result_bytes(ls)
+                depth = _loop_depth(ls)
+                mult = 1
+                for t in loop_trips[:depth]:
+                    mult *= t
+                raw[kind] += b
+                out[kind] += b * mult
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["total_static"] = sum(raw[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float           # analytic 6*N_active*D (train) etc.
+    flops_scale: float = 1.0     # scan trip-count correction applied
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_LINKS * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> Dict:
+        return dict(
+            arch=self.arch, shape=self.shape, mesh=self.mesh,
+            chips=self.chips,
+            hlo_flops=self.hlo_flops, hlo_bytes=self.hlo_bytes,
+            coll_bytes=self.coll_bytes, model_flops=self.model_flops,
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            useful_ratio=self.useful_ratio, flops_scale=self.flops_scale,
+        )
+
+
+def analytic_model_flops(cfg, shape_kind: str, seq_len: int,
+                         global_batch: int, local_epochs: int = 1,
+                         n_virtual_clients: int = 1) -> float:
+    """6*N_active*tokens for a train round (fwd+bwd over L epochs and
+    virtual clients), 2*N_active per generated token for decode."""
+    n_active = cfg.active_param_count()
+    if shape_kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n_active * tokens * local_epochs * n_virtual_clients
+    if shape_kind == "prefill":
+        return 2.0 * n_active * seq_len * global_batch
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * global_batch

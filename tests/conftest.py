@@ -1,0 +1,20 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the real (1-device) backend; mesh integration tests spawn
+subprocesses with their own flags."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tree_allclose(a, b, atol=1e-5, rtol=1e-5):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if not jnp.allclose(x, y, atol=atol, rtol=rtol):
+            return False
+    return True

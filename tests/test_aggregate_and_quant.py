@@ -1,0 +1,80 @@
+"""Aggregation transports + quantizers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregate as A
+from repro.core import quantize as Q
+from repro.core import sparsify as S
+
+
+def _masked(key, C, n, alpha):
+    x = jax.random.normal(key, (C, n))
+    masks = jnp.stack([S.topk_mask_exact(x[c], S.k_for(n, alpha))
+                       for c in range(C)])
+    return jnp.where(masks, x, 0.0)
+
+
+@pytest.mark.parametrize("n", [100, 5000])
+@pytest.mark.parametrize("sort_free", [True, False])
+def test_sparse_pack_roundtrip(n, sort_free):
+    """gather+scatter transport == dense weighted sum on masked deltas."""
+    C, alpha = 4, 0.2
+    x = _masked(jax.random.PRNGKey(0), C, n, alpha)
+    w = jnp.asarray([1.0, 2.0, 0.5, 1.5])
+    dense = jnp.tensordot(w, x, axes=(0, 0))
+    sparse = A.sparse_independent_gather_sum({"x": x.reshape(C, n)},
+                                             alpha, w,
+                                             sort_free=sort_free)["x"]
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               atol=1e-5)
+
+
+def test_shared_pack_uses_w_support():
+    """SSM transport: m/v values are gathered at dW's support."""
+    C, n, alpha = 2, 64, 0.25
+    dw = _masked(jax.random.PRNGKey(1), C, n, alpha)
+    dm = jax.random.normal(jax.random.PRNGKey(2), (C, n))
+    dv = jax.random.normal(jax.random.PRNGKey(3), (C, n))
+    mask = dw != 0
+    dm_m, dv_m = jnp.where(mask, dm, 0), jnp.where(mask, dv, 0)
+    w = jnp.ones((C,))
+    aw, am, av = A.sparse_shared_gather_sum(
+        {"x": dw}, {"x": dm_m}, {"x": dv_m}, alpha, w)
+    np.testing.assert_allclose(np.asarray(aw["x"]),
+                               np.asarray(dw.sum(0)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(am["x"]),
+                               np.asarray(dm_m.sum(0)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(av["x"]),
+                               np.asarray(dv_m.sum(0)), atol=1e-5)
+
+
+def test_sign_quant_preserves_block_l1():
+    x = jax.random.normal(jax.random.PRNGKey(4), (4096,))
+    q = Q.sign_quant(x, block=512)
+    # per-block magnitude is the L1 mean: mean |q| == mean |x| per block
+    xb = x.reshape(-1, 512)
+    qb = np.asarray(q).reshape(-1, 512)
+    np.testing.assert_allclose(np.abs(qb).mean(1),
+                               np.abs(np.asarray(xb)).mean(1), rtol=1e-5)
+    assert set(np.unique(np.sign(qb))) <= {-1.0, 0.0, 1.0}
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_uniform_quant_error_bound(bits):
+    x = jax.random.normal(jax.random.PRNGKey(5), (4096,))
+    q = Q.uniform_quant(x, bits=bits, block=256)
+    qmax = 2.0 ** (bits - 1) - 1
+    xb = np.asarray(x).reshape(-1, 256)
+    step = np.abs(xb).max(1) / qmax
+    err = np.abs(np.asarray(q).reshape(-1, 256) - xb)
+    assert (err <= step[:, None] * 0.5 + 1e-6).all()
+
+
+def test_int8_store_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(6), (1000,)) * 3
+    q, scale = Q.int8_store(x, block=128)
+    y = Q.int8_load(q, scale, x.shape, x.dtype, block=128)
+    rel = float(jnp.max(jnp.abs(y - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.01

@@ -1,0 +1,30 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (load_fed_state, load_pytree, save_fed_state,
+                              save_pytree)
+from repro.core import FedConfig, fed_init
+
+
+def test_pytree_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": (jnp.ones((2, 3)),
+                                         {"c": jnp.zeros(5, jnp.int32)})}
+    p = tmp_path / "ck.npz"
+    save_pytree(tree, p, meta={"note": "test"})
+    out = load_pytree(tree, p)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fed_state_roundtrip(tmp_path):
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros(4)}
+    fed = FedConfig(n_clients=3)
+    st = fed_init(fed, params)
+    st = st._replace(round=jnp.int32(7))
+    p = tmp_path / "fed.npz"
+    save_fed_state(st, p)
+    out = load_fed_state(st, p)
+    assert int(out.round) == 7
+    for x, y in zip(jax.tree.leaves(st.W), jax.tree.leaves(out.W)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

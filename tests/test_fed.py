@@ -1,0 +1,183 @@
+"""Core FL-round behaviour: paper-exactness properties + convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedConfig, fed_init, make_fl_round
+from repro.core.fed import _local_adam
+from repro.optim import AdamHyper, adam_init, adam_step
+
+
+def _toy():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (8, 4)) * 0.1, "b": jnp.zeros((4,))}
+    C = 4
+    xs = jax.random.normal(jax.random.PRNGKey(1), (C, 16, 8))
+    w_true = jax.random.normal(jax.random.PRNGKey(2), (8, 4))
+    ys = jnp.einsum("cbi,ij->cbj", xs, w_true)
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    return params, (xs, ys), loss_fn, C
+
+
+def _run(algo, rounds=8, alpha=0.25, mode="scan", agg="dense", C=4, L=3,
+         **kw):
+    params, batches, loss_fn, _ = _toy()
+    fed = FedConfig(algorithm=algo, alpha=alpha, local_epochs=L,
+                    n_clients=C, adam=AdamHyper(lr=0.05),
+                    client_mode=mode, aggregate=agg, **kw)
+    rf = jax.jit(make_fl_round(fed, loss_fn))
+    st = fed_init(fed, params)
+    losses = []
+    for _ in range(rounds):
+        st, mets = rf(st, batches)
+        losses.append(float(jnp.mean(mets["loss"])))
+    return st, losses, mets
+
+
+def test_alpha_one_equals_dense_fedadam():
+    """alpha=1 makes FedAdam-SSM *exactly* FedAdam (Sec. VII setup)."""
+    st_ssm, _, _ = _run("fedadam_ssm", alpha=1.0)
+    st_dense, _, _ = _run("fedadam", alpha=1.0)
+    for a, b in zip(jax.tree.leaves(st_ssm.W), jax.tree.leaves(st_dense.W)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_scan_equals_vmap():
+    for algo in ["fedadam_ssm", "fedadam_top", "fedadam", "fedsgd"]:
+        st_s, _, _ = _run(algo, mode="scan")
+        st_v, _, _ = _run(algo, mode="vmap")
+        for a, b in zip(jax.tree.leaves(st_s.W), jax.tree.leaves(st_v.W)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
+def test_sparse_gather_equals_dense_transport():
+    st_d, _, _ = _run("fedadam_ssm", mode="vmap", agg="dense")
+    st_s, _, _ = _run("fedadam_ssm", mode="vmap", agg="sparse_gather")
+    for a, b in zip(jax.tree.leaves(st_d.W), jax.tree.leaves(st_s.W)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_single_client_dense_equals_centralized_adam():
+    """N=1, alpha=1: one FL round of L epochs == L centralized Adam steps
+    (paper Eqs. 3-5, no bias correction)."""
+    params, (xs, ys), loss_fn, _ = _toy()
+    batch = (xs[:1], ys[:1])
+    fed = FedConfig(algorithm="fedadam", alpha=1.0, local_epochs=5,
+                    n_clients=1, adam=AdamHyper(lr=0.01))
+    rf = jax.jit(make_fl_round(fed, loss_fn))
+    st = fed_init(fed, params)
+    st, _ = rf(st, batch)
+
+    # centralized: plain Adam, same hyper, same data
+    h = AdamHyper(lr=0.01)
+    w = params
+    opt = adam_init(params)
+    single = (xs[0], ys[0])
+    for _ in range(5):
+        g = jax.grad(loss_fn)(w, single)
+        w, opt = adam_step(w, g, opt, h)
+    for a, b in zip(jax.tree.leaves(st.W), jax.tree.leaves(w)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # moments aggregated too (the paper's point vs Efficient-Adam)
+    for a, b in zip(jax.tree.leaves(st.M), jax.tree.leaves(opt.m)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("algo", ["fedadam_ssm", "fedadam_top", "fedadam",
+                                  "ssm_m", "ssm_v", "fairness_top",
+                                  "fedsgd", "efficient_adam"])
+def test_converges_on_toy(algo):
+    _, losses, _ = _run(algo, rounds=15)
+    assert losses[-1] < losses[0] * 0.6, losses
+
+
+def test_uplink_bits_ordering():
+    """SSM < Top < dense bit counts at alpha=0.05 (Section IV)."""
+    _, _, m_ssm = _run("fedadam_ssm", rounds=1, alpha=0.05)
+    _, _, m_top = _run("fedadam_top", rounds=1, alpha=0.05)
+    _, _, m_dense = _run("fedadam", rounds=1, alpha=0.05)
+    assert float(m_ssm["uplink_bits"]) < float(m_top["uplink_bits"]) \
+        < float(m_dense["uplink_bits"])
+
+
+def test_shared_mask_alignment():
+    """FedAdam-SSM: all three uploaded deltas share the SAME support."""
+    params, batches, loss_fn, C = _toy()
+    fed = FedConfig(algorithm="fedadam_ssm", alpha=0.3, local_epochs=2,
+                    n_clients=C, adam=AdamHyper(lr=0.05), client_mode="vmap")
+    st = fed_init(fed, params)
+    # inspect one client's compression by reproducing the deltas
+    from repro.core.fed import _tree_sub
+    from repro.core import masks
+    batch0 = jax.tree.map(lambda x: x[0], batches)
+    w, m, v, _ = _local_adam(loss_fn, st.W, st.M, st.V, batch0, fed)
+    dW, dM, dV = _tree_sub(w, st.W), _tree_sub(m, st.M), _tree_sub(v, st.V)
+    mask = masks.shared_mask("ssm_w", dW, dM, dV, 0.3)
+    from repro.core import sparsify as S
+    for leaf_dw, leaf_mask in zip(jax.tree.leaves(dW),
+                                  jax.tree.leaves(mask)):
+        exact = S.topk_mask_exact(leaf_dw, S.k_for(leaf_dw.size, 0.3))
+        assert bool(jnp.all(leaf_mask == exact))  # Eq. 28: mask=Top_k(|dW|)
+
+
+def test_error_feedback_accumulates():
+    """Beyond-paper EF: residuals carried to the next round change the
+    trajectory and do not diverge."""
+    st_ef, losses_ef, _ = _run("fedadam_ssm", rounds=12, alpha=0.1,
+                               error_feedback=True)
+    st_no, losses_no, _ = _run("fedadam_ssm", rounds=12, alpha=0.1)
+    assert np.isfinite(losses_ef).all()
+    diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+               zip(jax.tree.leaves(st_ef.W), jax.tree.leaves(st_no.W)))
+    assert diff > 1e-7  # EF actually did something
+
+
+def test_onebit_adam_with_warmup_converges():
+    """1-bit Adam two-phase protocol: dense FedAdam warmup populates V,
+    then the compressed phase uses it as a frozen precondition."""
+    params, batches, loss_fn, C = _toy()
+    warm = FedConfig(algorithm="fedadam", alpha=1.0, local_epochs=1,
+                     n_clients=C, adam=AdamHyper(lr=0.02))
+    rf_warm = jax.jit(make_fl_round(warm, loss_fn))
+    st = fed_init(warm, params)
+    for _ in range(3):
+        st, mets = rf_warm(st, batches)
+    onebit = FedConfig(algorithm="onebit_adam", alpha=1.0, local_epochs=1,
+                       n_clients=C, adam=AdamHyper(lr=0.02))
+    st1 = fed_init(onebit, st.W)
+    st1 = st1._replace(M=st.M, V=st.V)
+    rf1 = jax.jit(make_fl_round(onebit, loss_fn))
+    losses = []
+    for _ in range(15):
+        st1, mets = rf1(st1, batches)
+        losses.append(float(jnp.mean(mets["loss"])))
+    assert losses[-1] < losses[0], losses
+
+
+def test_partial_participation():
+    """Beyond-paper: sampling a fraction of clients per round still
+    converges, reduces per-round uplink proportionally, and only active
+    clients contribute to the aggregate."""
+    params, batches, loss_fn, C = _toy()
+    fed = FedConfig(algorithm="fedadam_ssm", alpha=0.5, local_epochs=2,
+                    n_clients=C, adam=AdamHyper(lr=0.05),
+                    participation=0.5)
+    rf = jax.jit(make_fl_round(fed, loss_fn))
+    st = fed_init(fed, params)
+    losses = []
+    for _ in range(15):
+        st, mets = rf(st, batches)
+        losses.append(float(jnp.mean(mets["loss"])))
+    assert losses[-1] < losses[0]
+    # uplink accounts only the sampled clients
+    full = FedConfig(algorithm="fedadam_ssm", alpha=0.5, local_epochs=2,
+                     n_clients=C, adam=AdamHyper(lr=0.05))
+    rf_full = jax.jit(make_fl_round(full, loss_fn))
+    _, mets_full = rf_full(fed_init(full, params), batches)
+    assert float(mets["uplink_bits"]) == 0.5 * float(mets_full["uplink_bits"])

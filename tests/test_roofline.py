@@ -1,0 +1,46 @@
+"""Roofline machinery: HLO collective parsing, trip scaling, term math."""
+import jax.numpy as jnp
+
+from repro import roofline as RL
+
+_HLO = """
+HloModule jit_step
+  %all-reduce.1 = f32[16,1024]{1,0} all-reduce(%x), metadata={op_name="jit(step)/foo" stack_frame_id=1}
+  %all-gather.2 = bf16[2,512]{1,0} all-gather(%y), metadata={op_name="jit(step)/while/body/bar" stack_frame_id=2}
+  %all-reduce.3 = (f32[8]{0}, f32[8]{0}) all-reduce(%a, %b), metadata={op_name="jit(step)/while/body/closed_call/while/body/baz"}
+  %fusion.9 = f32[4]{0} fusion(%c), kind=kLoop
+  %wrapped_all_reduce_fusion = ...
+"""
+
+
+def test_collective_parse_and_trip_scaling():
+    out = RL.collective_bytes(_HLO, loop_trips=(3, 5))
+    # depth 0: 16*1024*4 = 65536 ; depth 1: 2*512*2 = 2048 * 3
+    # depth 2: 2*8*4 = 64 * 15
+    assert out["all-reduce"] == 65536 + 64 * 15
+    assert out["all-gather"] == 2048 * 3
+    assert out["total_static"] == 65536 + 2048 + 64
+    assert out["count"] == 3
+
+
+def test_roofline_terms_and_bottleneck():
+    rl = RL.Roofline(arch="a", shape="s", mesh="m", chips=256,
+                     hlo_flops=256 * RL.PEAK_FLOPS,        # 1 s compute
+                     hlo_bytes=256 * RL.HBM_BW * 2,        # 2 s memory
+                     coll_bytes=256 * RL.ICI_LINKS * RL.ICI_BW * 0.5,
+                     model_flops=128 * RL.PEAK_FLOPS)
+    assert abs(rl.t_compute - 1.0) < 1e-9
+    assert abs(rl.t_memory - 2.0) < 1e-9
+    assert abs(rl.t_collective - 0.5) < 1e-9
+    assert rl.bottleneck == "memory"
+    assert abs(rl.useful_ratio - 0.5) < 1e-9
+
+
+def test_analytic_model_flops():
+    from repro.configs import get_config
+    cfg = get_config("starcoder2-3b")
+    train = RL.analytic_model_flops(cfg, "train", 4096, 256, local_epochs=2)
+    decode = RL.analytic_model_flops(cfg, "decode", 32768, 128)
+    n = cfg.active_param_count()
+    assert train == 6.0 * n * 4096 * 256 * 2
+    assert decode == 2.0 * n * 128

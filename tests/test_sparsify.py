@@ -1,0 +1,87 @@
+"""Property tests for the Top_k sparsifier (Definitions 1-2 of the paper)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsify as S
+
+
+@st.composite
+def _vec(draw, min_n=4, max_n=4096):
+    n = draw(st.integers(min_n, max_n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    scale = draw(st.sampled_from([1e-6, 1.0, 1e4]))
+    return jnp.asarray(rng.normal(0, scale, size=n).astype(np.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(_vec(), st.floats(0.01, 1.0))
+def test_k_contraction_property(x, alpha):
+    """Definition 2: E||x - Top_k(x)||^2 <= (1 - k/d)||x||^2.
+    Top-k is the *best* k-contraction, so this holds deterministically."""
+    k = S.k_for(x.size, alpha)
+    mask = S.topk_mask_exact(x, k)
+    err = jnp.sum(jnp.where(mask, 0.0, x) ** 2)
+    bound = (1.0 - k / x.size) * jnp.sum(x ** 2)
+    assert float(err) <= float(bound) + 1e-6 * float(jnp.sum(x ** 2)) + 1e-30
+
+
+@settings(max_examples=40, deadline=None)
+@given(_vec(), st.floats(0.01, 0.9))
+def test_exact_mask_count_and_magnitudes(x, alpha):
+    k = S.k_for(x.size, alpha)
+    mask = S.topk_mask_exact(x, k)
+    assert int(mask.sum()) == k
+    kept_min = jnp.min(jnp.where(mask, jnp.abs(x), jnp.inf))
+    dropped_max = jnp.max(jnp.where(mask, -jnp.inf, jnp.abs(x)))
+    assert float(kept_min) >= float(dropped_max) - 1e-7
+
+
+@settings(max_examples=25, deadline=None)
+@given(_vec(min_n=64), st.floats(0.02, 0.5))
+def test_threshold_mask_superset_semantics(x, alpha):
+    """Threshold mask keeps >= k elements and every kept element is >=
+    every dropped element in |.| (it's a level set of |x|)."""
+    k = S.k_for(x.size, alpha)
+    mask = S.topk_mask_threshold(x, k)
+    assert int(mask.sum()) >= min(k, x.size)
+    kept_min = jnp.min(jnp.where(mask, jnp.abs(x), jnp.inf))
+    dropped_max = jnp.max(jnp.where(mask, -jnp.inf, jnp.abs(x)))
+    assert float(kept_min) >= float(dropped_max) - 1e-7
+
+
+def test_blocked_mask_fraction():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3 * S.BLOCK + 123,))
+    m = S.blocked_topk_mask(x, 0.05)
+    frac = float(m.mean())
+    # per-block exact alpha, inflated only by the padded tail block
+    assert 0.05 <= frac <= 0.05 * (1 + S.BLOCK / x.size) + 1e-3
+
+
+def test_sparsify_identity_at_alpha_1():
+    x = jax.random.normal(jax.random.PRNGKey(1), (300,))
+    mask = S.topk_mask_exact(x, 300)
+    assert bool(jnp.all(S.sparsify(x, mask) == x))
+
+
+def test_tree_masks_per_tensor_and_global():
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (100,)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (50, 4)) * 10}
+    mt = S.tree_topk_masks(jax.tree.map(jnp.abs, tree), 0.1,
+                           scope="per_tensor")
+    assert int(mt["a"].sum()) == 10 and int(mt["b"].sum()) == 20
+    mg = S.tree_topk_masks(jax.tree.map(jnp.abs, tree), 0.1, scope="global")
+    # global ranking: 'b' is 10x larger so it should dominate the budget
+    assert int(mg["a"].sum()) + int(mg["b"].sum()) == 30
+    assert int(mg["b"].sum()) > int(mg["a"].sum())
+
+
+def test_sparsity_error_norm():
+    x = jnp.asarray([3.0, -4.0, 0.1, -0.2])
+    mask = S.topk_mask_exact(x, 2)
+    err = S.tree_sparsity_error({"x": x}, {"x": mask})
+    np.testing.assert_allclose(float(err), np.sqrt(0.1**2 + 0.2**2),
+                               rtol=1e-6)

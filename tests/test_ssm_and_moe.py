@@ -1,0 +1,107 @@
+"""Mixer-level correctness: Mamba-2 SSD chunked scan vs sequential
+recurrence; decode-step equivalence; MoE routing invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoESpec, SSMSpec
+from repro.models import layers as L
+from repro.models.params import materialize
+
+
+def _ssd_sequential(xh, dt, A, B, C):
+    """O(s) reference recurrence: h_{t} = h_{t-1}*exp(dt_t A) + dt_t B_t x_t;
+    y_t = C_t h_t."""
+    b, s, h, p = xh.shape
+    n = B.shape[-1]
+    hstate = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t] * A)                    # (b, h)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, t],
+                         xh[:, t].astype(jnp.float32),
+                         B[:, t].astype(jnp.float32))
+        hstate = hstate * decay[..., None, None] + upd
+        ys.append(jnp.einsum("bn,bhpn->bhp", C[:, t].astype(jnp.float32),
+                             hstate))
+    return jnp.stack(ys, 1), hstate
+
+
+@pytest.mark.parametrize("s,chunk", [(8, 4), (16, 4), (12, 12), (32, 8)])
+def test_ssd_chunked_equals_sequential(s, chunk):
+    b, h, p, n = 2, 3, 4, 5
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    xh = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(jax.random.PRNGKey(9), (b, s, n))
+    y_chunk, h_chunk = L.ssd_chunked(xh, dt, A, B, C, chunk)
+    y_seq, h_seq = _ssd_sequential(xh, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_seq),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssm_block_decode_matches_fwd():
+    """Full mamba2 block: stepping token-by-token with ssm_decode matches
+    the parallel ssm_fwd outputs."""
+    d, s, b = 64, 12, 2
+    spec = SSMSpec(d_state=16, d_conv=4, expand=2, head_dim=32, chunk_size=4)
+    meta = L.ssm_params(d, spec)
+    p = materialize(meta, jax.random.PRNGKey(0), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d)) * 0.5
+    y_par, cache_out = L.ssm_fwd(p, spec, x)
+
+    cache = {"conv": jnp.zeros((b, spec.d_conv - 1, 2 * d * 2 // 2 + 2 * 16)),
+             "state": jnp.zeros((b, spec.num_heads(d), spec.head_dim, 16))}
+    ch = 2 * d + 2 * 16   # d_inner + 2*n
+    cache["conv"] = jnp.zeros((b, spec.d_conv - 1, ch))
+    ys = []
+    for t in range(s):
+        y_t, cache = L.ssm_decode(p, spec, x[:, t:t + 1], cache)
+        ys.append(y_t[:, 0])
+    y_step = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_par),
+                               atol=2e-4, rtol=2e-3)
+    # final states agree too
+    np.testing.assert_allclose(np.asarray(cache["state"]),
+                               np.asarray(cache_out["state"]),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_moe_routing_invariants():
+    d = 32
+    spec = MoESpec(num_experts=4, top_k=2, d_ff=64, capacity_factor=2.0)
+    meta = L.moe_params(d, spec)
+    p = materialize(meta, jax.random.PRNGKey(0), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d))
+    y, aux = L.moe_fwd(p, spec, x)
+    assert y.shape == x.shape
+    assert jnp.isfinite(y).all() and jnp.isfinite(aux)
+    # aux loss near 1 (=E * uniform^2 * E) for near-uniform routing at init
+    assert 0.5 < float(aux) < 4.0
+
+    # capacity semantics: with tiny capacity, output magnitude shrinks
+    # (tokens dropped), never NaN
+    tight = MoESpec(num_experts=4, top_k=2, d_ff=64, capacity_factor=0.1)
+    y2, _ = L.moe_fwd(p, tight, x)
+    assert jnp.isfinite(y2).all()
+    assert float(jnp.linalg.norm(y2)) <= float(jnp.linalg.norm(y)) + 1e-3
+
+
+def test_moe_shared_expert_contributes():
+    d = 16
+    spec = MoESpec(num_experts=2, top_k=1, d_ff=32,
+                   num_shared_experts=1, shared_d_ff=32)
+    meta = L.moe_params(d, spec)
+    p = materialize(meta, jax.random.PRNGKey(0), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, d))
+    y, _ = L.moe_fwd(p, spec, x)
+    p0 = dict(p)
+    p0["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
+    y0, _ = L.moe_fwd(p0, spec, x)
+    assert float(jnp.max(jnp.abs(y - y0))) > 1e-6
