@@ -1,4 +1,4 @@
-"""Aggregate the dry-run JSON artifacts into the EXPERIMENTS.md SRoofline
+"""Aggregate the dry-run JSON artifacts into the EXPERIMENTS.md §Roofline
 table: three roofline terms per (arch x shape x mesh), dominant bottleneck,
 MODEL_FLOPS/HLO_FLOPs ratio."""
 from __future__ import annotations

@@ -4,7 +4,7 @@ Layout-agnostic: leaves are saved under their joined tree path, so any
 pytree of arrays (params, FedState, decode caches) round-trips.  Sharded
 arrays are gathered to host before save (fine at example scale; a real
 multi-host deployment would use a tensorstore-backed writer — noted in
-DESIGN.md as the one substrate we stub at cluster scale).
+docs/ARCHITECTURE.md §7 as the one substrate we stub at cluster scale).
 """
 from __future__ import annotations
 

@@ -5,7 +5,8 @@ d_ff=2048, vocab=51865.  The mel-spectrogram + conv frontend is a STUB per
 the brief: ``input_specs()`` provides precomputed frame embeddings
 (batch, 1500, 512).  Decoder layers carry cross-attention to the encoder
 output.  long_500k decode is architecturally meaningless for this family
-(learned positions capped at 448) and is skipped — see DESIGN.md §6.
+(learned positions capped at 448) and is skipped — see
+docs/ARCHITECTURE.md §6.
 """
 from repro.configs.base import (
     ArchConfig, AttentionSpec, EncoderSpec, LayerSpec, register,

@@ -8,4 +8,10 @@ from repro.core.fed import (  # noqa: F401
     fed_init,
     make_fl_round,
 )
-from repro.core import comm, masks, quantize, sparsify  # noqa: F401
+from repro.core import comm, compressors, masks, quantize, sparsify  # noqa: F401
+from repro.core.compressors import (  # noqa: F401
+    Compressor,
+    Deltas,
+    Packed,
+    make_compressor,
+)

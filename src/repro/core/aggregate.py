@@ -18,7 +18,11 @@ Napkin math (per link, bf16 values, int32 indices, alpha=0.05, N=16):
 i.e. on a 16-client axis the SHARED mask is exactly what keeps the sparse
 transport under the dense baseline — FedAdam-Top's independent masks are
 *worse* than dense at this (alpha, N).  With N=2 pod-clients the SSM gather
-is ~12x under dense.  (Recorded in EXPERIMENTS.md.)
+is ~12x under dense.  (Recorded in EXPERIMENTS.md §Transport.)
+
+Entry point for the round: ``packed_gather_sum`` dispatches on the
+compressor's ``transport`` tag (docs/compressors.md), so new compressors
+ride the sparse transport without edits here.
 """
 from __future__ import annotations
 
@@ -271,6 +275,34 @@ def _gather_clients(x, caxes):
     the batch sharding P(caxes, ...)."""
     name = caxes if len(caxes) > 1 else caxes[0]
     return jax.lax.all_gather(x, name, axis=0, tiled=False)
+
+
+def packed_gather_sum(compressor, sW_c, sM_c, sV_c, weights, *, alpha,
+                      value_dtype=None, sort_free=True):
+    """Aggregate any compressor's packed representation, keyed on its
+    ``transport`` tag (see core/compressors and docs/compressors.md):
+
+    * ``shared_sparse``      — one index set per client-leaf, three value
+                               sets (FedAdam-SSM family).
+    * ``independent_sparse`` — three (values, indices) packs per leaf
+                               (FedAdam-Top).
+    * anything else          — dense weighted sum (identity / quantized
+                               carriers have no sparse structure to pack).
+
+    New compressors therefore get the sparse all-gather path for free by
+    declaring the matching transport.
+    """
+    t = getattr(compressor, "transport", "dense")
+    if t == "shared_sparse":
+        return sparse_shared_gather_sum(sW_c, sM_c, sV_c, alpha, weights,
+                                        value_dtype, sort_free)
+    if t == "independent_sparse":
+        agg = lambda tr: sparse_independent_gather_sum(
+            tr, alpha, weights, value_dtype, sort_free)
+        return agg(sW_c), agg(sM_c), agg(sV_c)
+    return (dense_weighted_sum(sW_c, weights),
+            dense_weighted_sum(sM_c, weights),
+            dense_weighted_sum(sV_c, weights))
 
 
 def sparse_independent_gather_sum(tree_c, alpha, weights, value_dtype=None,

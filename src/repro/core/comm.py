@@ -11,7 +11,12 @@ d = model dimension, k = alpha*d, N = #devices:
 * Efficient-Adam : N(b*d + q*d/B) for b-bit two-way quantization
 
 These are *accounting* functions (exact bit counts reported as metrics);
-the on-mesh collective realization lives in core/aggregate.py.
+the on-mesh collective realization lives in core/aggregate.py.  The FL
+round does NOT call :func:`bits_for` directly: each compressor in
+core/compressors reports its own per-client bits through these formulas
+(``Compressor.bits_per_client``), so the metric is produced by the same
+object that produced the payload and cannot drift from the transport.
+Per-algorithm formula derivations: docs/compressors.md.
 """
 from __future__ import annotations
 

@@ -1,0 +1,30 @@
+"""Stateful uplink compressors + registry (see docs/compressors.md).
+
+Importing this package registers every built-in algorithm; the import
+order below fixes the canonical ``available()`` / ``ALGORITHMS`` order.
+"""
+from repro.core.compressors.base import (  # noqa: F401
+    DIAG_KEYS,
+    Compressor,
+    Deltas,
+    Packed,
+    available,
+    diag_metrics,
+    make_compressor,
+    register,
+    transport_of,
+    tree_add,
+    tree_size,
+    tree_sub,
+    unregister,
+    zero_diag,
+)
+from repro.core.compressors.topk import (  # noqa: F401
+    IndependentTopKCompressor,
+    SharedTopKCompressor,
+)
+from repro.core.compressors.dense import DenseCompressor  # noqa: F401
+from repro.core.compressors.quantized import (  # noqa: F401
+    EfficientAdamCompressor,
+    OneBitAdamCompressor,
+)

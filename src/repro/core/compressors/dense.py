@@ -1,0 +1,51 @@
+"""Identity (dense) compressors — the FedAdam / FedSGD baselines.
+
+Nothing is dropped: the full f32/bf16 triple crosses the uplink, so the
+bit cost is ``n_tensors * d * q`` per client (Section IV's 3Ndq for
+FedAdam, Ndq for FedSGD).  These exist so the dense baselines ride the
+same registry/round machinery as every sparse and quantized scheme.
+
+See ``docs/compressors.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import comm
+from repro.core.compressors.base import (
+    Compressor, Deltas, Packed, diag_metrics, register, tree_size,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseCompressor(Compressor):
+    """Identity operator over ``n_tensors`` communicated tensors."""
+
+    name: str = "fedadam"
+    q_bits: int = 32
+    n_tensors: int = 3                 # W, M, V (FedAdam) vs W only (FedSGD)
+    local_update: str = "adam"
+    server_update: str = "wmv"
+
+    transport = "dense"
+
+    def compress(self, deltas: Deltas, state):
+        packed = Packed(deltas.W, deltas.M, deltas.V,
+                        diag_metrics(deltas, deltas))
+        return packed, state, self.bits_per_client(tree_size(deltas.W))
+
+    def bits_per_client(self, d: int) -> int:
+        if self.n_tensors == 3:
+            return comm.bits_fedadam(d, 1, self.q_bits)
+        return comm.bits_fedsgd(d, 1, self.q_bits)
+
+
+@register("fedadam")
+def _fedadam(fed) -> DenseCompressor:
+    return DenseCompressor(name="fedadam", q_bits=fed.q_bits, n_tensors=3)
+
+
+@register("fedsgd")
+def _fedsgd(fed) -> DenseCompressor:
+    return DenseCompressor(name="fedsgd", q_bits=fed.q_bits, n_tensors=1,
+                           local_update="sgd", server_update="w_only")

@@ -1,0 +1,107 @@
+"""Quantizing compressors with error feedback — the 1-bit Adam and
+Efficient-Adam baselines (Section IV / VII).
+
+Both are only correct as *stateful* operators: the quantization residual
+``d - Q(d)`` must be added back into the next round's input, otherwise
+the bias accumulates and the methods diverge.  ``init_state`` therefore
+always allocates the per-client residual tree; :mod:`repro.core.fed`
+carries it through the ``scan``/``vmap`` client axes.
+
+* ``OneBitAdamCompressor``  — sign-quantizes the *momentum* delta with a
+  per-block L1 scale (``local_update="momentum"``: one momentum step per
+  round, V frozen after warmup; ``server_update="precond_m"`` applies the
+  frozen-V preconditioned step).  Bits: ``N (d + q ceil(d/B))``.
+* ``EfficientAdamCompressor`` — b-bit uniform-quantizes the *weight*
+  delta; local Adam moments are persistent and never aggregated (the
+  staleness the paper criticizes; ``local_update="local_adam"``).
+  Bits: ``N (b d + q ceil(d/B))``.
+
+See ``docs/compressors.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comm, quantize
+from repro.core.compressors.base import (
+    Compressor, Deltas, Packed, diag_metrics, register, tree_add,
+    tree_size, tree_sub, tree_zeros_like,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class OneBitAdamCompressor(Compressor):
+    """1-bit Adam: EF sign quantization of the momentum delta."""
+
+    name: str = "onebit_adam"
+    block: int = 1024
+    q_bits: int = 32
+
+    transport = "quantized"
+    local_update = "momentum"
+    server_update = "precond_m"
+
+    def init_state(self, params):
+        return {"err": jax.tree.map(jnp.zeros_like, params)}
+
+    def compress(self, deltas: Deltas, state):
+        assert state is not None, "1-bit Adam requires error-feedback state"
+        dM = tree_add(deltas.M, state["err"])
+        q = quantize.tree_sign_quant(dM, self.block)
+        new_state = {"err": tree_sub(dM, q)}
+        z = tree_zeros_like(q)
+        ef = Deltas(deltas.W, dM, deltas.V)
+        packed = Packed(z, q, tree_zeros_like(deltas.V),
+                        diag_metrics(ef, Deltas(deltas.W, q, deltas.V)))
+        return packed, new_state, self.bits_per_client(tree_size(deltas.W))
+
+    def bits_per_client(self, d: int) -> int:
+        return comm.bits_onebit_adam(d, 1, self.q_bits, block=self.block)
+
+
+@dataclasses.dataclass(frozen=True)
+class EfficientAdamCompressor(Compressor):
+    """Efficient-Adam: EF b-bit uniform quantization of the weight delta."""
+
+    name: str = "efficient_adam"
+    quant_bits: int = 8
+    block: int = 1024
+    q_bits: int = 32
+
+    transport = "quantized"
+    local_update = "local_adam"
+    server_update = "w_only"
+
+    def init_state(self, params):
+        return {"err": jax.tree.map(jnp.zeros_like, params)}
+
+    def compress(self, deltas: Deltas, state):
+        assert state is not None, \
+            "Efficient-Adam requires error-feedback state"
+        dW = tree_add(deltas.W, state["err"])
+        q = quantize.tree_uniform_quant(dW, self.quant_bits, self.block)
+        new_state = {"err": tree_sub(dW, q)}
+        ef = Deltas(dW, deltas.M, deltas.V)
+        packed = Packed(q, tree_zeros_like(deltas.M),
+                        tree_zeros_like(deltas.V),
+                        diag_metrics(ef, Deltas(q, deltas.M, deltas.V)))
+        return packed, new_state, self.bits_per_client(tree_size(deltas.W))
+
+    def bits_per_client(self, d: int) -> int:
+        return comm.bits_efficient_adam(d, 1, self.q_bits,
+                                        bits=self.quant_bits,
+                                        block=self.block)
+
+
+@register("onebit_adam")
+def _onebit(fed) -> OneBitAdamCompressor:
+    return OneBitAdamCompressor(q_bits=fed.q_bits)
+
+
+@register("efficient_adam")
+def _efficient(fed) -> EfficientAdamCompressor:
+    return EfficientAdamCompressor(quant_bits=fed.quant_bits,
+                                   q_bits=fed.q_bits)

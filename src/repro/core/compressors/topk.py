@@ -1,0 +1,137 @@
+"""Top-k sparsifying compressors — FedAdam-SSM and its mask baselines.
+
+``SharedTopKCompressor`` realizes the paper's contribution: ONE boolean
+mask (Eq. 28: ``Top_k(|dW|)`` for rule ``ssm_w``; ``ssm_m``/``ssm_v``/
+``fairness_top`` are the Section VII mask-rule baselines) applied to all
+three deltas, so a single index set describes the support of W, M and V
+— the alignment that makes the Section IV bit count
+``N * min(3kq + d, k(3q + log2 d))`` instead of three index sets.
+
+``IndependentTopKCompressor`` is FedAdam-Top: three separate Top_k masks,
+three index sets, ``3N * min(kq + d, k(q + log2 d))`` bits.
+
+Both optionally carry a beyond-paper error-feedback residual on dW: the
+round's masked-away remainder is added back into the next round's input
+(``init_state`` returns the zero residual; stateless when EF is off).
+
+See ``docs/compressors.md`` for the protocol and bit formulas.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comm, masks
+from repro.core import sparsify as S
+from repro.core.compressors.base import (
+    Compressor, Deltas, Packed, register, tree_add, tree_size, tree_sub,
+)
+
+
+def _cast_values(value_dtype, tree):
+    """Beyond-paper low-precision value transport (cast + cast back)."""
+    if value_dtype is None:
+        return tree
+    dt = jnp.dtype(value_dtype)
+    return jax.tree.map(lambda x: x.astype(dt).astype(x.dtype), tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class _TopKBase(Compressor):
+    alpha: float = 0.05
+    mask_scope: str = "per_tensor"        # per_tensor | global
+    exact_topk: bool = True
+    error_feedback: bool = False
+    value_dtype: Optional[str] = None
+    q_bits: int = 32
+
+    def init_state(self, params):
+        if not self.error_feedback:
+            return None
+        return {"err": jax.tree.map(jnp.zeros_like, params)}
+
+    def _masks(self, dW, dM, dV):
+        raise NotImplementedError
+
+    def compress(self, deltas: Deltas, state):
+        dW, dM, dV = deltas
+        if state is not None:
+            dW = tree_add(dW, state["err"])
+        mW, mM, mV = self._masks(dW, dM, dV)
+        sW = _cast_values(self.value_dtype, S.tree_sparsify(dW, mW))
+        sM = _cast_values(self.value_dtype, S.tree_sparsify(dM, mM))
+        sV = _cast_values(self.value_dtype, S.tree_sparsify(dV, mV))
+        new_state = {"err": tree_sub(dW, sW)} if state is not None else None
+        diag = {
+            "err_w": S.tree_sparsity_error(dW, mW),
+            "err_m": S.tree_sparsity_error(dM, mM),
+            "err_v": S.tree_sparsity_error(dV, mV),
+            "norm_dw": S.tree_norm(dW),
+            "norm_dm": S.tree_norm(dM),
+            "norm_dv": S.tree_norm(dV),
+        }
+        packed = Packed(sW, sM, sV, diag)
+        return packed, new_state, self.bits_per_client(tree_size(deltas.W))
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedTopKCompressor(_TopKBase):
+    """One shared mask for all three tensors (FedAdam-SSM family)."""
+
+    name: str = "fedadam_ssm"
+    rule: str = "ssm_w"                   # ssm_w | ssm_m | ssm_v | fairness_top
+
+    transport = "shared_sparse"
+
+    def _masks(self, dW, dM, dV):
+        m = masks.shared_mask(self.rule, dW, dM, dV, self.alpha,
+                              self.mask_scope, self.exact_topk)
+        return m, m, m
+
+    def bits_per_client(self, d: int) -> int:
+        return comm.bits_fedadam_ssm(d, S.k_for(d, self.alpha), 1,
+                                     self.q_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class IndependentTopKCompressor(_TopKBase):
+    """Three independent Top_k masks (FedAdam-Top)."""
+
+    name: str = "fedadam_top"
+
+    transport = "independent_sparse"
+
+    def _masks(self, dW, dM, dV):
+        return masks.independent_masks(dW, dM, dV, self.alpha,
+                                       self.mask_scope, self.exact_topk)
+
+    def bits_per_client(self, d: int) -> int:
+        return comm.bits_fedadam_top(d, S.k_for(d, self.alpha), 1,
+                                     self.q_bits)
+
+
+def _shared_factory(rule):
+    def factory(fed) -> SharedTopKCompressor:
+        return SharedTopKCompressor(
+            name=fed.algorithm, rule=rule, alpha=fed.alpha,
+            mask_scope=fed.mask_scope, exact_topk=fed.exact_topk,
+            error_feedback=fed.error_feedback, value_dtype=fed.value_dtype,
+            q_bits=fed.q_bits)
+    return factory
+
+
+register("fedadam_ssm")(_shared_factory("ssm_w"))
+register("ssm_m")(_shared_factory("ssm_m"))
+register("ssm_v")(_shared_factory("ssm_v"))
+register("fairness_top")(_shared_factory("fairness_top"))
+
+
+@register("fedadam_top")
+def _fedadam_top(fed) -> IndependentTopKCompressor:
+    return IndependentTopKCompressor(
+        name="fedadam_top", alpha=fed.alpha, mask_scope=fed.mask_scope,
+        exact_topk=fed.exact_topk, error_feedback=fed.error_feedback,
+        value_dtype=fed.value_dtype, q_bits=fed.q_bits)

@@ -5,9 +5,13 @@ One FL round (Algorithm 2):
 1. every client starts local state from the global (W^t, M^t, V^t);
 2. L local Adam epochs (Eqs. 3-5; no bias correction) on the client's data;
 3. client deltas  dW = w - W^t, dM = m - M^t, dV = v - V^t;
-4. compression:   a SHARED sparse mask (Eq. 28: mask = Top_k(|dW|)) applied
-   to all three deltas (FedAdam-SSM), or per-algorithm alternatives;
-5. server FedAvg over the sparse deltas; globals advance by the aggregate.
+4. compression:   the round's ``Compressor`` (core/compressors registry,
+   selected by ``FedConfig.algorithm``) encodes the delta triple — the
+   paper's SHARED sparse mask (Eq. 28: mask = Top_k(|dW|)) for
+   FedAdam-SSM, or the per-algorithm alternative — carrying any
+   per-client error-feedback state across rounds;
+5. server FedAvg over the compressed deltas; globals advance by the
+   aggregate per the compressor's ``server_update`` rule.
 
 The paper's Algorithm 2 downloads the *previous* round's aggregate at the
 start of the next round; applying the aggregate at the end of the current
@@ -16,7 +20,12 @@ which is how we implement it.
 
 The round function is architecture-agnostic: it sees an abstract
 ``loss_fn(params, batch) -> scalar`` and parameter pytrees, so every
-architecture in the zoo trains with the technique unchanged.
+architecture in the zoo trains with the technique unchanged.  It is also
+algorithm-agnostic: all per-scheme behaviour (what is communicated, the
+error-feedback semantics, the uplink bit accounting, which aggregation
+transport applies) lives behind the compressor's declarative tags —
+adding a scheme is a compressor registration, not a surgery here.  See
+docs/compressors.md.
 
 Client execution modes
 ----------------------
@@ -37,26 +46,26 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec
 
-from repro.core import aggregate, comm, masks, quantize
-from repro.core import sparsify as S
+from repro.core import aggregate, compressors
+from repro.core.compressors import DIAG_KEYS, Deltas
+from repro.core.compressors.base import tree_add as _tree_add
+from repro.core.compressors.base import tree_sub as _tree_sub
 from repro.optim.adam import AdamHyper, AdamState, adam_step, sgd_step
 
 _F32 = jnp.float32
 
-ALGORITHMS = (
-    "fedadam_ssm",     # the paper's contribution (mask rule ssm_w)
-    "ssm_m",           # baseline: shared mask from |dM|
-    "ssm_v",           # baseline: shared mask from |dV|
-    "fairness_top",    # baseline: shared mask from the normalized union
-    "fedadam_top",     # baseline: three independent top-k masks
-    "fedadam",         # baseline: dense FedAdam (alpha=1 special case)
-    "fedsgd",          # baseline: dense FedSGD
-    "onebit_adam",     # baseline: 1-bit Adam (warmup + frozen precondition)
-    "efficient_adam",  # baseline: two-way quantized Adam with EF
-)
-
-_RULE_OF = {"fedadam_ssm": "ssm_w", "ssm_m": "ssm_m", "ssm_v": "ssm_v",
-            "fairness_top": "fairness_top"}
+#: Built-in algorithm names, in canonical order (== the compressor
+#: registry's registration order; see core/compressors/__init__.py):
+#:
+#: fedadam_ssm    — the paper's contribution (shared mask rule ssm_w)
+#: ssm_m, ssm_v   — baselines: shared mask from |dM| / |dV|
+#: fairness_top   — baseline: shared mask from the normalized union
+#: fedadam_top    — baseline: three independent top-k masks
+#: fedadam        — baseline: dense FedAdam (alpha=1 special case)
+#: fedsgd         — baseline: dense FedSGD
+#: onebit_adam    — baseline: 1-bit Adam (warmup + frozen precondition)
+#: efficient_adam — baseline: two-way quantized Adam with EF
+ALGORITHMS = compressors.available()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,7 +93,9 @@ class FedConfig:
     participation: float = 1.0
 
     def __post_init__(self):
-        assert self.algorithm in ALGORITHMS, self.algorithm
+        # any *registered* compressor is a valid algorithm — drop-in
+        # schemes registered via compressors.register() pass too
+        assert self.algorithm in compressors.available(), self.algorithm
 
 
 class FedState(NamedTuple):
@@ -92,23 +103,29 @@ class FedState(NamedTuple):
     M: Any                                # global first moments
     V: Any                                # global second moments
     round: jax.Array                      # int32 scalar
-    client_state: Any                     # EF residuals etc. (may be None)
+    client_state: Any                     # per-client state (may be None):
+    #   {"comp": <compressor EF state>, "m"/"v": persistent local moments}
 
 
 def fed_init(fed: FedConfig, params) -> FedState:
     zeros = lambda: jax.tree.map(jnp.zeros_like, params)
-    client_state = None
-    if fed.algorithm in ("onebit_adam", "efficient_adam") or fed.error_feedback:
-        err = jax.tree.map(
-            lambda x: jnp.zeros((fed.n_clients,) + x.shape, x.dtype), params)
-        client_state = {"err": err}
-        if fed.algorithm == "efficient_adam":
-            client_state["m"] = jax.tree.map(
-                lambda x: jnp.zeros((fed.n_clients,) + x.shape, x.dtype), params)
-            client_state["v"] = jax.tree.map(
-                lambda x: jnp.zeros((fed.n_clients,) + x.shape, x.dtype), params)
+    comp = compressors.make_compressor(fed)
+    C = fed.n_clients
+    stack0 = lambda t: jax.tree.map(
+        lambda x: jnp.zeros((C,) + x.shape, x.dtype), t)
+    parts = {}
+    cs1 = comp.init_state(params)
+    if cs1 is not None:
+        # replicate the single-client compressor state over the client axis
+        parts["comp"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), cs1)
+    if comp.local_update == "local_adam":
+        # persistent local Adam moments (efficient_adam: never aggregated)
+        parts["m"] = stack0(params)
+        parts["v"] = stack0(params)
     return FedState(W=params, M=zeros(), V=zeros(),
-                    round=jnp.zeros((), jnp.int32), client_state=client_state)
+                    round=jnp.zeros((), jnp.int32),
+                    client_state=parts or None)
 
 
 # ---------------------------------------------------------------------------
@@ -150,61 +167,17 @@ def _local_sgd(loss_fn, W, batch, fed: FedConfig):
     return w, jnp.mean(losses)
 
 
-# ---------------------------------------------------------------------------
-# Per-client compression
-# ---------------------------------------------------------------------------
-
-
-def _tree_sub(a, b):
-    return jax.tree.map(lambda x, y: (x.astype(_F32) - y.astype(_F32))
-                        .astype(x.dtype), a, b)
-
-
-def _tree_add(a, b):
-    return jax.tree.map(lambda x, y: (x.astype(_F32) + y.astype(_F32))
-                        .astype(x.dtype), a, b)
-
-
-def _cast_values(fed: FedConfig, tree):
-    if fed.value_dtype is None:
-        return tree
-    dt = jnp.dtype(fed.value_dtype)
-    return jax.tree.map(lambda x: x.astype(dt).astype(x.dtype), tree)
-
-
-def _compress_sparse(fed: FedConfig, dW, dM, dV, err):
-    """Shared-mask / independent-mask sparsification.  Returns
-    (masked deltas, new_err, metrics)."""
-    if err is not None:
-        dW = _tree_add(dW, err)
-    if fed.algorithm == "fedadam_top":
-        mW, mM, mV = masks.independent_masks(
-            dW, dM, dV, fed.alpha, fed.mask_scope, fed.exact_topk)
-    else:
-        rule = _RULE_OF[fed.algorithm]
-        mW = masks.shared_mask(rule, dW, dM, dV, fed.alpha,
-                               fed.mask_scope, fed.exact_topk)
-        mM = mV = mW
-    sW = S.tree_sparsify(dW, mW)
-    sM = S.tree_sparsify(dM, mM)
-    sV = S.tree_sparsify(dV, mV)
-    sW, sM, sV = (_cast_values(fed, t) for t in (sW, sM, sV))
-    new_err = _tree_sub(dW, sW) if err is not None else None
-    metrics = {
-        "err_w": S.tree_sparsity_error(dW, mW),
-        "err_m": S.tree_sparsity_error(dM, mM),
-        "err_v": S.tree_sparsity_error(dV, mV),
-        "norm_dw": S.tree_norm(dW),
-        "norm_dm": S.tree_norm(dM),
-        "norm_dv": S.tree_norm(dV),
-    }
-    return (sW, sM, sV), new_err, metrics
-
-
-def _zero_metrics():
-    z = jnp.zeros((), _F32)
-    return {k: z for k in ("err_w", "err_m", "err_v",
-                           "norm_dw", "norm_dm", "norm_dv")}
+def _local_momentum(loss_fn, W, M, batch, fed: FedConfig):
+    """One momentum step (1-bit Adam compressed phase: V frozen)."""
+    b = jax.tree.map(lambda x: x[0], batch) \
+        if fed.per_epoch_batches else batch
+    loss, g = jax.value_and_grad(loss_fn)(W, b)
+    h = fed.adam
+    m_new = jax.tree.map(
+        lambda m, gg: (h.beta1 * m.astype(_F32)
+                       + (1 - h.beta1) * gg.astype(_F32)).astype(m.dtype),
+        M, g)
+    return m_new, loss
 
 
 # ---------------------------------------------------------------------------
@@ -225,63 +198,57 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
     major (and epoch-major when per_epoch_batches).  weights: optional (C,)
     FedAvg weights |D_n| (defaults to uniform).
     """
+    comp = compressors.make_compressor(fed)
+    if fed.client_mode != "scan" and fed.client_axes is not None:
+        # the shard_map spatial driver does not thread per-client state
+        # (round_shardmap passes cstate=None); fail fast rather than
+        # silently dropping error-feedback residuals at trace time
+        if comp.init_state({"_": jnp.zeros((1,), _F32)}) is not None:
+            raise NotImplementedError(
+                f"compressor {comp.name!r} carries per-client state, which "
+                "the shard_map spatial driver does not thread; use "
+                "client_mode='scan', or vmap without client_axes")
 
     def client_step(W, M, V, batch, cstate):
         """One client's round: local epochs + compression.
         Returns (sW, sM, sV, new_cstate, metrics)."""
-        if fed.algorithm == "fedsgd":
+        comp_state = cstate.get("comp") if cstate is not None else None
+        extras = {}
+
+        if comp.local_update == "sgd":
             w, loss = _local_sgd(loss_fn, W, batch, fed)
             dW = _tree_sub(w, W)
-            zeros = jax.tree.map(jnp.zeros_like, dW)
-            return dW, zeros, zeros, cstate, dict(_zero_metrics(), loss=loss)
-
-        if fed.algorithm == "onebit_adam":
-            # one momentum step; V frozen after warmup (handled by caller
-            # passing frozen V); communicate sign-quantized momentum delta.
-            b = jax.tree.map(lambda x: x[0], batch) \
-                if fed.per_epoch_batches else batch
-            loss, g = jax.value_and_grad(loss_fn)(W, b)
-            h = fed.adam
-            m_new = jax.tree.map(
-                lambda m, gg: (h.beta1 * m.astype(_F32)
-                               + (1 - h.beta1) * gg.astype(_F32)).astype(m.dtype),
-                M, g)
+            z = jax.tree.map(jnp.zeros_like, dW)
+            deltas = Deltas(dW, z, z)
+        elif comp.local_update == "momentum":
+            m_new, loss = _local_momentum(loss_fn, W, M, batch, fed)
             dM = _tree_sub(m_new, M)
-            err = cstate["err"]
-            dM_c = _tree_add(dM, err)
-            q = quantize.tree_sign_quant(dM_c)
-            new_err = _tree_sub(dM_c, q)
-            # W delta implied server-side: -lr * (M+q)/sqrt(V_frozen)
-            zeros = jax.tree.map(jnp.zeros_like, q)
-            return zeros, q, zeros, {"err": new_err}, \
-                dict(_zero_metrics(), loss=loss)
-
-        if fed.algorithm == "efficient_adam":
+            z = jax.tree.map(jnp.zeros_like, dM)
+            deltas = Deltas(z, dM, z)
+        elif comp.local_update == "local_adam":
             # persistent local moments (never aggregated — the staleness
-            # the paper criticizes); two-way b-bit quantization with EF.
-            m0, v0 = cstate["m"], cstate["v"]
-            w, m, v, loss = _local_adam(loss_fn, W, m0, v0, batch, fed)
+            # the paper criticizes)
+            w, m, v, loss = _local_adam(loss_fn, W, cstate["m"],
+                                        cstate["v"], batch, fed)
             dW = _tree_sub(w, W)
-            dW_c = _tree_add(dW, cstate["err"])
-            q = quantize.tree_uniform_quant(dW_c, fed.quant_bits)
-            new_err = _tree_sub(dW_c, q)
-            zeros = jax.tree.map(jnp.zeros_like, q)
-            return q, zeros, zeros, {"err": new_err, "m": m, "v": v}, \
-                dict(_zero_metrics(), loss=loss)
+            z = jax.tree.map(jnp.zeros_like, dW)
+            deltas = Deltas(dW, z, z)
+            extras = {"m": m, "v": v}
+        else:                             # "adam": the FedAdam family
+            w, m, v, loss = _local_adam(loss_fn, W, M, V, batch, fed)
+            deltas = Deltas(_tree_sub(w, W), _tree_sub(m, M),
+                            _tree_sub(v, V))
 
-        # Adam-family: fedadam (dense) and all sparse variants
-        w, m, v, loss = _local_adam(loss_fn, W, M, V, batch, fed)
-        dW, dM, dV = _tree_sub(w, W), _tree_sub(m, M), _tree_sub(v, V)
-        if fed.algorithm == "fedadam":
-            mets = dict(_zero_metrics(), loss=loss,
-                        norm_dw=S.tree_norm(dW), norm_dm=S.tree_norm(dM),
-                        norm_dv=S.tree_norm(dV))
-            return dW, dM, dV, cstate, mets
-        err = cstate["err"] if (cstate is not None and fed.error_feedback) \
-            else None
-        (sW, sM, sV), new_err, mets = _compress_sparse(fed, dW, dM, dV, err)
-        new_cstate = {"err": new_err} if new_err is not None else cstate
-        return sW, sM, sV, new_cstate, dict(mets, loss=loss)
+        packed, new_comp_state, _bits = comp.compress(deltas, comp_state)
+        sW, sM, sV = comp.decompress(packed)
+        if cstate is None:
+            new_cstate = None
+        else:
+            new_cstate = dict(cstate)
+            if "comp" in cstate:
+                new_cstate["comp"] = new_comp_state
+            new_cstate.update(extras)
+        return sW, sM, sV, new_cstate, dict(packed.diag, loss=loss)
 
     # -- round drivers --------------------------------------------------
 
@@ -292,8 +259,6 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
         acc0 = (zero(), zero(), zero())
 
         cs = state.client_state
-        cs_stub = jax.tree.map(lambda x: x[0], cs) if cs is not None else None
-
         has_cs = cs is not None
 
         def body(carry, xs):
@@ -337,7 +302,7 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
         stk = lambda tree: jax.tree.map(
             lambda x: PartitionSpec(cax, *([None] * (x.ndim - 1))), tree)
         mets_spec = {k: PartitionSpec(cax)
-                     for k in list(_zero_metrics()) + ["loss"]}
+                     for k in list(DIAG_KEYS) + ["loss"]}
         sW, sM, sV, mets = shard_map(
             body,
             in_specs=(rep(W), rep(M), rep(V), stk(batches),
@@ -381,17 +346,12 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
         wsum = jnp.sum(weights.astype(_F32))
         if fed.aggregate == "sparse_gather" and sparse_aggregate_fn is not None:
             aW, aM, aV = sparse_aggregate_fn(sW, sM, sV, weights)
-        elif fed.aggregate == "sparse_gather" and \
-                fed.algorithm in _RULE_OF:           # shared-mask family
-            aW, aM, aV = aggregate.sparse_shared_gather_sum(
-                sW, sM, sV, fed.alpha, weights, fed.value_dtype,
-                sort_free=not fed.exact_topk)
-        elif fed.aggregate == "sparse_gather" and \
-                fed.algorithm == "fedadam_top":
-            agg = lambda t: aggregate.sparse_independent_gather_sum(
-                t, fed.alpha, weights, fed.value_dtype,
-                sort_free=not fed.exact_topk)
-            aW, aM, aV = agg(sW), agg(sM), agg(sV)
+        elif fed.aggregate == "sparse_gather":
+            # transport keyed on the compressor — any shared_sparse /
+            # independent_sparse compressor rides the packed all-gather
+            aW, aM, aV = aggregate.packed_gather_sum(
+                comp, sW, sM, sV, weights, alpha=fed.alpha,
+                value_dtype=fed.value_dtype, sort_free=not fed.exact_topk)
         else:
             aW = aggregate.dense_weighted_sum(sW, weights)
             aM = aggregate.dense_weighted_sum(sM, weights)
@@ -423,12 +383,11 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
         aW, aM, aV = mean(aW), mean(aM), mean(aV)
 
         h = fed.adam
-        if fed.algorithm == "onebit_adam":
-            warm = state.round < fed.onebit_warmup_rounds
-            # warmup: clients behaved like fedadam?  (caller uses a separate
-            # dense FedConfig during warmup; here we always apply the
-            # compressed path:)  M advances by the aggregated momentum
-            # delta; W by the preconditioned step with frozen V.
+        if comp.server_update == "precond_m":
+            # 1-bit Adam: M advances by the aggregated momentum delta; W
+            # by the preconditioned step with frozen V.  (Warmup rounds
+            # run as a separate dense FedConfig — see the two-phase
+            # protocol in tests/test_fed.py.)
             M_new = _tree_add(state.M, aM)
             upd = jax.tree.map(
                 lambda mm, vv: (h.lr * mm.astype(_F32)
@@ -438,26 +397,23 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
                 lambda w, u: (w.astype(_F32) - u).astype(w.dtype),
                 state.W, upd)
             V_new = state.V
-        elif fed.algorithm == "efficient_adam":
+        elif comp.server_update == "w_only":
             W_new = _tree_add(state.W, aW)
             M_new, V_new = state.M, state.V
-        elif fed.algorithm == "fedsgd":
-            W_new = _tree_add(state.W, aW)
-            M_new, V_new = state.M, state.V
-        else:
+        else:                             # "wmv": the FedAdam family
             W_new = _tree_add(state.W, aW)
             M_new = _tree_add(state.M, aM)
             V_new = _tree_add(state.V, aV)
 
-        # uplink accounting (exact bits, Section IV / VII formulas)
+        # uplink accounting: the compressor's own bits report (Section IV
+        # / VII formulas in core/comm.py) x participating clients — the
+        # metric is produced by the same object that produced the payload
         d = sum(x.size for x in jax.tree.leaves(state.W))
-        k = S.k_for(d, fed.alpha)
         mets = dict(mets)
         active_clients = (max(1, int(round(fed.participation * C)))
                           if fed.participation < 1.0 else C)
         mets["uplink_bits"] = jnp.asarray(
-            comm.bits_for(fed.algorithm, d, k, active_clients, fed.q_bits,
-                          quant_bits=fed.quant_bits), _F32)
+            active_clients * comp.bits_per_client(d), _F32)
         new_state = FedState(W=W_new, M=M_new, V=V_new,
                              round=state.round + 1, client_state=new_cs)
         return new_state, mets

@@ -16,6 +16,10 @@ pytree applied to all three:
                    elementwise max of the normalized scores.
 * ``top``        — NOT a shared mask: three independent Top_k masks
                    (FedAdam-Top, Section IV).  Returned as a 3-tuple.
+
+Consumed by the top-k compressors (core/compressors/topk.py,
+docs/compressors.md); the rule string is a compressor-construction
+parameter, never dispatched on inside the FL round.
 """
 from __future__ import annotations
 

@@ -3,6 +3,9 @@ Efficient-Adam) and for the beyond-paper low-precision transports.
 
 All quantizers are blockwise (one fp32 scale per `block` elements) and come
 with an exact dequantizer, so error-feedback residuals are computable.
+
+These are the primitives under the stateful EF compressors in
+core/compressors/quantized.py (see docs/compressors.md).
 """
 from __future__ import annotations
 

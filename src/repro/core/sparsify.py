@@ -12,6 +12,9 @@ Two mask constructions:
 Masks are computed per-tensor ("per_tensor" scope, k_i = ceil(alpha * n_i))
 or over the concatenated flat model ("global" scope — the paper's exact
 formulation; feasible when the model fits one host).
+
+These are the primitives under the top-k compressors in
+core/compressors/topk.py (see docs/compressors.md).
 """
 from __future__ import annotations
 

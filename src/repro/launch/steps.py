@@ -17,6 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import sharding as shd
 from repro.configs.base import ArchConfig
+from repro.core.compressors import transport_of
 from repro.core.fed import FedConfig, FedState, make_fl_round
 from repro.models import model as M
 from repro.models import params as PM
@@ -72,7 +73,7 @@ def skip_reason(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
             return ("decoder positional capacity is 448 tokens by family "
                     "design — 500k decode is not a meaningful configuration")
         return ("pure full-attention family without a shipped sliding-window "
-                "variant — 500k decode skipped per DESIGN.md section 6")
+                "variant — 500k decode skipped per docs/ARCHITECTURE.md §6")
     return None
 
 
@@ -112,9 +113,11 @@ def build_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
         n_clients = _axes_size(mesh, caxes)
         client_mode = "vmap"
         if aggregate is None:
+            # keyed on the compressor's transport tag: any registered
+            # sparse scheme gets the packed all-gather uplink
             aggregate = ("sparse_gather"
-                         if algorithm in ("fedadam_ssm", "ssm_m", "ssm_v",
-                                          "fairness_top", "fedadam_top")
+                         if transport_of(algorithm) in
+                         ("shared_sparse", "independent_sparse")
                          else "dense")
         per_client = max(1, shape.global_batch // n_clients)
         batch_lead = (n_clients, per_client)
@@ -158,7 +161,7 @@ def build_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
         from repro.core.aggregate import make_shardmap_sparse_aggregate
         sparse_agg = make_shardmap_sparse_aggregate(
             mesh, pspec, caxes, alpha,
-            shared=(algorithm != "fedadam_top"))
+            shared=(transport_of(algorithm) == "shared_sparse"))
 
     round_fn = make_fl_round(fed, loss, sparse_aggregate_fn=sparse_agg)
 

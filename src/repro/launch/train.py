@@ -21,7 +21,8 @@ import numpy as np
 
 from repro.checkpoint import save_fed_state
 from repro.configs import get_config, reduce_for_smoke
-from repro.core import FedConfig, fed_init, make_fl_round
+from repro.core import FedConfig, fed_init, make_compressor, make_fl_round
+from repro.core.compressors import available as available_algorithms
 from repro.data import synthetic_tokens, synthetic_frontend_embeds
 from repro.models import init_params, loss_fn
 from repro.optim import AdamHyper
@@ -48,7 +49,9 @@ def build_client_batches(cfg, n_clients, batch_size, seq_len, *, seed=0,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--algorithm", default="fedadam_ssm")
+    ap.add_argument("--algorithm", default="fedadam_ssm",
+                    choices=available_algorithms(),
+                    help="any registered compressor (docs/compressors.md)")
     ap.add_argument("--alpha", type=float, default=0.05)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--local-epochs", type=int, default=3)
@@ -69,15 +72,18 @@ def main() -> None:
 
     params = init_params(cfg, jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"[train] {cfg.name}: {n_params/1e6:.2f}M params, "
-          f"{args.clients} clients, L={args.local_epochs}, "
-          f"alpha={args.alpha}, algo={args.algorithm}")
 
     fed = FedConfig(
         algorithm=args.algorithm, alpha=args.alpha,
         local_epochs=args.local_epochs, n_clients=args.clients,
         adam=AdamHyper(lr=args.lr), client_mode="scan",
         use_kernel_adam=args.kernel_adam)
+    comp = make_compressor(fed)
+    print(f"[train] {cfg.name}: {n_params/1e6:.2f}M params, "
+          f"{args.clients} clients, L={args.local_epochs}, "
+          f"alpha={args.alpha}, algo={args.algorithm} "
+          f"(transport={comp.transport}, "
+          f"{comp.bits_per_client(n_params)/8e6:.2f} MB/client/round)")
 
     def loss(p, batch):
         return loss_fn(cfg, p, batch["tokens"],

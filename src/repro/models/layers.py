@@ -295,7 +295,8 @@ def mla_decode(p, a: AttentionSpec, x, cache, *, pos):
     simpler NoPE-in-latent convention for the absorbed path (rope applied
     to q only contributes a head-invariant rotation that we drop), which
     keeps the cache fully compressed; the training path applies full rope.
-    Documented in DESIGN.md as a family-faithful simplification.
+    Documented in docs/ARCHITECTURE.md §5 as a family-faithful
+    simplification.
     """
     b = x.shape[0]
     r = a.kv_lora_rank
@@ -434,7 +435,7 @@ def moe_fwd(p, m: MoESpec, x):
     y = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * h, p["w_down"])
     y = _moe_hint(y, "data", "model", None, None)
     # combine: one (b, s, d) gather per routing slot j < k from the flat
-    # (b, E*C, d) buffer.  (Measured alternatives, see EXPERIMENTS.md SPerf:
+    # (b, E*C, d) buffer.  (Measured alternatives, see EXPERIMENTS.md §Perf:
     # a (b,s*k,d) values-scatter and an explicit (e,c)-indexed gather both
     # lower to multi-TB replication collectives under GSPMD; this flat
     # take_along_axis form is the best of the three at every scale tried.)

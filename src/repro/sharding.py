@@ -15,7 +15,7 @@ Parameter rule-sets
            exceeds a 16-chip group: kimi-k2, jamba-1.5-large,
            mistral-large, gemma3-27b.
 
-Client mappings (DESIGN.md Section 3/4):
+Client mappings (docs/ARCHITECTURE.md §3-§4):
 ``spatial`` : FL clients = mesh data(+pod) slices; per-client divergent
               replicas carried as a leading vmapped client axis.
 ``virtual`` : FL clients time-multiplexed by lax.scan; full mesh per client.

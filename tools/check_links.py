@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Check that relative markdown links in docs/ and *.md resolve.
+
+Scans every ``*.md`` under the repo root (skipping dot-dirs) for inline
+links ``[text](target)``; for each non-external target, verifies the
+referenced file exists relative to the linking file (and that a
+``#fragment`` on a local .md target matches a heading in it).  Exits
+nonzero listing every dangling link.  Run from anywhere:
+
+    python tools/check_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", ".github", "node_modules", "__pycache__"}
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _squash(text: str) -> str:
+    """Loose slug: lowercase alphanumerics only (GitHub's exact slug
+    rules around dashes/symbols are fiddly; this catches truly dangling
+    anchors without false-positiving on punctuation)."""
+    return re.sub(r"[^a-z0-9]", "", text.lower())
+
+
+def _headings(md: Path) -> set:
+    slugs = set()
+    for line in md.read_text(encoding="utf-8").splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if m:
+            slugs.add(_squash(m.group(1)))
+    return slugs
+
+
+def check(root: Path) -> int:
+    errors = []
+    md_files = [p for p in root.rglob("*.md")
+                if not any(part in SKIP_DIRS or part.startswith(".")
+                           for part in p.relative_to(root).parts[:-1])]
+    for md in md_files:
+        for target in LINK_RE.findall(md.read_text(encoding="utf-8")):
+            if target.startswith(EXTERNAL):
+                continue
+            path_part, _, frag = target.partition("#")
+            if not path_part:           # pure in-page anchor
+                if frag and _squash(frag) not in _headings(md):
+                    errors.append(f"{md.relative_to(root)}: dangling "
+                                  f"anchor #{frag}")
+                continue
+            dest = (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md.relative_to(root)}: broken link "
+                              f"-> {target}")
+            elif frag and dest.suffix == ".md" \
+                    and _squash(frag) not in _headings(dest):
+                errors.append(f"{md.relative_to(root)}: {path_part} has "
+                              f"no heading for #{frag}")
+    for e in errors:
+        print(f"[check_links] {e}", file=sys.stderr)
+    print(f"[check_links] {len(md_files)} files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()))
