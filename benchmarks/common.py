@@ -3,15 +3,41 @@
 Every benchmark mirrors one paper table/figure, runs at CPU-feasible scale
 (reduced widths / fewer rounds — the TREND is the reproduction target, the
 absolute numbers belong to the paper's GPU testbed), and emits CSV rows.
+
+JSON artifacts: ``write_bench_json`` emits the schema-versioned
+``BENCH_<name>.json`` perf-trajectory artifacts (``benchmarks.run
+--json``), and ``validate_bench`` checks a parsed document against the
+schema in docs/benchmarks.md.  CI runs the validator as
+``python -m benchmarks.common BENCH_kernels.json ...`` — the schema the
+docs describe and the schema CI enforces are this one module.
 """
 from __future__ import annotations
 
 import csv
+import json
+import sys
 import time
 from pathlib import Path
-from typing import Iterable, Sequence
+from typing import Iterable, List, Sequence
 
 OUT_DIR = Path("experiments/benchmarks")
+
+#: Bump when a field changes meaning or a required field is added;
+#: documented in docs/benchmarks.md.
+SCHEMA_VERSION = 1
+
+#: Required top-level keys of a BENCH_*.json document.
+TOP_KEYS = ("schema_version", "benchmark", "generated_by", "backend",
+            "jax_version", "rows")
+
+#: Required per-row fields -> type.  All other row fields are optional;
+#: known optional numeric fields are listed in ROW_OPTIONAL.
+ROW_REQUIRED = {"name": str, "n": int, "us_per_call": (int, float)}
+ROW_OPTIONAL = {"dtype": str, "note": str,
+                "bytes_moved": (int, float), "gb_per_s": (int, float),
+                "k": int, "achieved_k": int,
+                "overselect_frac": (int, float),
+                "speedup_vs_reference": (int, float)}
 
 
 def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]):
@@ -25,6 +51,105 @@ def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]):
     return path
 
 
+def row_builder(rows: list, jrows: list):
+    """Shared row-shape builder for the JSON-emitting suites: appends
+    the CSV tuple to ``rows`` and the schema'd dict to ``jrows``, so the
+    BENCH_*.json row shape is defined once next to its schema."""
+    def add(name, n, us, derived="", **extra):
+        rows.append((name, n, f"{us:.1f}", derived))
+        jrows.append({"name": name, "n": int(n),
+                      "us_per_call": round(us, 2), "dtype": "float32",
+                      **extra})
+    return add
+
+
+def write_bench_json(benchmark: str, rows: List[dict], out_dir=".") -> Path:
+    """Emit ``BENCH_<benchmark>.json`` (schema in docs/benchmarks.md).
+    Validates before writing so a malformed artifact can never ship."""
+    import jax
+
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "benchmark": benchmark,
+        "generated_by": "benchmarks.run",
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "rows": rows,
+    }
+    errors = validate_bench(doc)
+    if errors:
+        raise ValueError(f"BENCH_{benchmark}.json fails its own schema: "
+                         + "; ".join(errors))
+    path = Path(out_dir) / f"BENCH_{benchmark}.json"
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def validate_bench(doc) -> List[str]:
+    """Schema check of a parsed BENCH_*.json document; returns the list
+    of violations (empty == valid)."""
+    errors = []
+    if not isinstance(doc, dict):
+        return ["document is not a JSON object"]
+    for key in TOP_KEYS:
+        if key not in doc:
+            errors.append(f"missing top-level key {key!r}")
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        errors.append(f"schema_version {doc.get('schema_version')!r} != "
+                      f"{SCHEMA_VERSION}")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errors.append("rows must be a non-empty list")
+        return errors
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"rows[{i}] is not an object")
+            continue
+        for field, typ in ROW_REQUIRED.items():
+            if field not in row:
+                errors.append(f"rows[{i}] missing {field!r}")
+            elif not isinstance(row[field], typ) \
+                    or isinstance(row[field], bool):
+                errors.append(f"rows[{i}].{field} has type "
+                              f"{type(row[field]).__name__}")
+        for field, typ in ROW_OPTIONAL.items():
+            if field in row and (not isinstance(row[field], typ)
+                                 or isinstance(row[field], bool)):
+                errors.append(f"rows[{i}].{field} has type "
+                              f"{type(row[field]).__name__}")
+        if isinstance(row.get("us_per_call"), (int, float)) \
+                and row["us_per_call"] < 0:
+            errors.append(f"rows[{i}].us_per_call negative")
+    return errors
+
+
+def main(argv: Sequence[str]) -> int:
+    """CLI validator: ``python -m benchmarks.common BENCH_*.json``."""
+    if not argv:
+        print("usage: python -m benchmarks.common BENCH_file.json ...",
+              file=sys.stderr)
+        return 2
+    bad = 0
+    for arg in argv:
+        path = Path(arg)
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[bench-schema] {path}: unreadable: {e}",
+                  file=sys.stderr)
+            bad += 1
+            continue
+        errors = validate_bench(doc)
+        for e in errors:
+            print(f"[bench-schema] {path}: {e}", file=sys.stderr)
+        bad += bool(errors)
+        rows = doc.get("rows") if isinstance(doc, dict) else None
+        n_rows = len(rows) if isinstance(rows, list) else 0
+        print(f"[bench-schema] {path}: "
+              f"{'INVALID' if errors else 'ok'} ({n_rows} rows)")
+    return 1 if bad else 0
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.time()
@@ -32,3 +157,7 @@ class Timer:
 
     def __exit__(self, *a):
         self.dt = time.time() - self.t0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

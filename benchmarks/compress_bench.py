@@ -1,0 +1,148 @@
+"""Compressor hot-path benchmark — the Top_k/SSM sparsification step that
+the paper's entire communication win hinges on (BENCH_compress.json).
+
+Measured per flat size (1<<16 .. 1<<23) and per real model pytree
+(whisper-base / starcoder2-3b at ``reduce_for_smoke`` shapes — the full
+configs do not fit a CPU testbed; on TPU the same harness runs the true
+shapes):
+
+* ``compress_sort``       — ``SharedTopKCompressor`` over the original
+  sort-based exact masks (the default / small-model path; baseline for
+  ``speedup_vs_reference``).
+* ``compress_threshold``  — same compressor over the jnp
+  threshold-bisection reference (``sparsify_backend="reference"``).
+* ``compress_fused``      — the fused arithmetic the kernel backend
+  streams in one pass (3-pass tau selection + ``ssm_apply_ef``: mask
+  apply x3 + bf16 wire cast + EF residual), timed as the composed jnp
+  expression.  Interpret-mode Pallas timing is meaningless off-TPU, so
+  off-TPU this row measures the same arithmetic through XLA; on TPU it
+  runs the real kernels.
+
+``bytes_moved`` is the analytic HBM-traffic model of each variant
+(docs/benchmarks.md §bytes); ``achieved_k`` counts the actually-kept
+support of the emitted payload.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row_builder, write_bench_json, write_csv
+from benchmarks.kernel_bench import _time
+from repro.core import sparsify as S
+from repro.core.compressors.base import Deltas
+from repro.core.compressors.topk import SharedTopKCompressor
+from repro.kernels.ssm_apply.ref import ssm_apply_ef_ref
+from repro.kernels.topk_mask.ref import select_tau_ref
+
+CONFIG_NAMES = ("whisper-base", "starcoder2-3b")
+
+_ITEM = 4           # f32 carrier
+_BISECT_ITERS = 24  # core/sparsify.topk_mask_threshold default
+
+
+def _composed_bytes(n: int) -> int:
+    """Reference threshold compress: absmax + 24 bisection count passes
+    (1 read each), 3 mask-apply rounds (read + write), EF residual
+    subtract (2 reads + 1 write)."""
+    return (1 + _BISECT_ITERS + 6 + 3) * n * _ITEM
+
+
+def _fused_bytes(n: int) -> int:
+    """Kernel pipeline: 3 selection passes (1 read each) + ONE fused
+    apply/cast/residual pass (3 reads + 4 writes)."""
+    return (3 + 3 + 4) * n * _ITEM
+
+
+def _deltas_for(tree) -> Deltas:
+    key = jax.random.PRNGKey(0)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, 3 * len(leaves)).reshape(3, len(leaves), 2)
+    mk = lambda row, scale: jax.tree_util.tree_unflatten(
+        treedef, [jax.random.normal(k, l.shape, jnp.float32) * scale
+                  for k, l in zip(row, leaves)])
+    dW = mk(keys[0], 1.0)
+    dM = mk(keys[1], 0.1)
+    dV = jax.tree.map(jnp.abs, mk(keys[2], 0.01))
+    return Deltas(dW, dM, dV)
+
+
+def _compressor(exact: bool, alpha: float) -> SharedTopKCompressor:
+    return SharedTopKCompressor(
+        alpha=alpha, exact_topk=exact, error_feedback=True,
+        value_dtype="bfloat16", sparsify_backend="reference")
+
+
+def _time_compress(comp, deltas, iters) -> tuple:
+    state = comp.init_state(deltas.W)
+    fn = jax.jit(lambda dl, st: comp.compress(dl, st)[:2])
+    us = _time(fn, deltas, state, iters=iters)
+    packed, _ = fn(deltas, state)
+    achieved = sum(int(jnp.sum(x != 0)) for x in jax.tree.leaves(packed.W))
+    return us, achieved
+
+
+def run(sizes=(1 << 16, 1 << 20, 1 << 23), alpha=0.05, json_out=False,
+        full=False):
+    rows, jrows = [], []
+    add = row_builder(rows, jrows)
+
+    def bench_tree(label, tree, iters):
+        deltas = _deltas_for(tree)
+        d = sum(x.size for x in jax.tree.leaves(tree))
+        k = sum(S.k_for(x.size, alpha) for x in jax.tree.leaves(tree))
+        t_sort, _ = _time_compress(_compressor(True, alpha), deltas, iters)
+        t_thr, ach = _time_compress(_compressor(False, alpha), deltas,
+                                    iters)
+        # the fused-kernel arithmetic over the same pytree, one jit
+        def fused(dl):
+            out = []
+            for w, m, v in zip(jax.tree.leaves(dl.W), jax.tree.leaves(dl.M),
+                               jax.tree.leaves(dl.V)):
+                tau = select_tau_ref(w, S.k_for(w.size, alpha))
+                out.append(ssm_apply_ef_ref(tau, w, m, v,
+                                            value_dtype="bfloat16"))
+            return out
+        t_fused = _time(jax.jit(fused), deltas, iters=iters)
+
+        add(f"compress_sort{label}", d, t_sort, k=k,
+            speedup_vs_reference=1.0)
+        add(f"compress_threshold{label}", d, t_thr,
+            f"speedup={t_sort / t_thr:.2f}x", k=k, achieved_k=ach,
+            overselect_frac=round((ach - k) / k, 5),
+            bytes_moved=_composed_bytes(d),
+            speedup_vs_reference=round(t_sort / t_thr, 3))
+        fused_note = ("" if jax.default_backend() == "tpu" else
+                      "off-TPU stand-in: composed-jnp form of the kernel "
+                      "arithmetic (oracle selection is O(32n) vectorized, "
+                      "not streaming) — bytes_moved models the TPU kernel")
+        add(f"compress_fused{label}", d, t_fused,
+            f"speedup={t_sort / t_fused:.2f}x", k=k,
+            bytes_moved=_fused_bytes(d),
+            gb_per_s=round(_fused_bytes(d) / (t_fused * 1e-6) / 1e9, 3),
+            speedup_vs_reference=round(t_sort / t_fused, 3),
+            **({"note": fused_note} if fused_note else {}))
+
+    for n in sizes:
+        bench_tree("", {"w": jax.ShapeDtypeStruct((n,), jnp.float32)},
+                   iters=5 if n <= 1 << 20 else 3)
+
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import abstract_params, params as PM
+    for name in CONFIG_NAMES:
+        cfg = get_config(name)
+        if not full:
+            cfg = reduce_for_smoke(cfg)
+        sds = PM.abstract(abstract_params(cfg), "float32")
+        bench_tree(f"_{name.replace('-', '_')}", sds, iters=3)
+
+    write_csv("compress_bench", ("name", "n", "us_per_call", "derived"),
+              rows)
+    if json_out:
+        write_bench_json("compress", jrows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(json_out=True):
+        print(",".join(str(c) for c in r))

@@ -2,9 +2,14 @@
 
     PYTHONPATH=src python -m benchmarks.run            # fast CPU suite
     PYTHONPATH=src python -m benchmarks.run --full     # larger models
+    PYTHONPATH=src python -m benchmarks.run --json     # + BENCH_*.json
 
 Prints ``name,us_per_call,derived`` CSV lines (plus per-benchmark CSV
-artifacts under experiments/benchmarks/).
+artifacts under experiments/benchmarks/).  With ``--json``, the kernels
+and compress suites additionally write the schema-versioned perf
+trajectory artifacts ``BENCH_kernels.json`` / ``BENCH_compress.json`` to
+the working directory (schema: docs/benchmarks.md; CI validates them via
+``python -m benchmarks.common``).
 """
 from __future__ import annotations
 
@@ -12,16 +17,22 @@ import argparse
 import sys
 import time
 
+SUITES = ("fig1", "fig2", "fig345", "kernels", "compress", "roofline")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="bigger models / more rounds")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig2,fig345,kernels,roofline")
+                    help="comma list: " + ",".join(SUITES))
+    ap.add_argument("--json", action="store_true",
+                    help="emit BENCH_*.json artifacts (kernels, compress)")
     args = ap.parse_args()
-    want = set(args.only.split(",")) if args.only else \
-        {"fig1", "fig2", "fig345", "kernels", "roofline"}
+    want = set(args.only.split(",")) if args.only else set(SUITES)
+    unknown = want - set(SUITES)
+    if unknown:
+        ap.error(f"unknown suite(s) {sorted(unknown)}; known: {SUITES}")
 
     rows = []
 
@@ -63,9 +74,17 @@ def main() -> None:
     if "kernels" in want:
         from benchmarks import kernel_bench as KB
         t0 = time.time()
-        out = KB.run()
+        out = KB.run(json_out=args.json)
         emit("kernel_bench", (time.time() - t0) * 1e6,
              f"rows={len(out)} (see experiments/benchmarks/kernel_bench.csv)")
+
+    if "compress" in want:
+        from benchmarks import compress_bench as CB
+        t0 = time.time()
+        out = CB.run(json_out=args.json, full=args.full)
+        emit("compress_bench", (time.time() - t0) * 1e6,
+             f"rows={len(out)} "
+             "(see experiments/benchmarks/compress_bench.csv)")
 
     if "roofline" in want:
         from benchmarks import roofline_table as RT

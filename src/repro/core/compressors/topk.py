@@ -14,6 +14,14 @@ Both optionally carry a beyond-paper error-feedback residual on dW: the
 round's masked-away remainder is added back into the next round's input
 (``init_state`` returns the zero residual; stateless when EF is off).
 
+Hot path: with threshold masks (``exact_topk=False``) and the kernel
+backend active (``sparsify_backend`` / REPRO_SPARSIFY_BACKEND, auto on
+TPU), ``SharedTopKCompressor.compress`` runs the FUSED Pallas pipeline —
+streaming 3-pass tau selection, then mask apply + ``value_dtype`` wire
+cast + EF residual in one ``ssm_apply_ef`` pass — instead of 3-4
+composed elementwise rounds over HBM.  Backend rules and the fused
+contract: docs/kernels.md.
+
 See ``docs/compressors.md`` for the protocol and bit formulas.
 """
 from __future__ import annotations
@@ -47,6 +55,10 @@ class _TopKBase(Compressor):
     error_feedback: bool = False
     value_dtype: Optional[str] = None
     q_bits: int = 32
+    # auto | kernel | reference — resolved by core/sparsify.resolve_backend
+    # (TPU -> Pallas kernels, else jnp reference; env-overridable).  Only
+    # the threshold (exact_topk=False) masks have a kernel realization.
+    sparsify_backend: str = "auto"
 
     def init_state(self, params):
         if not self.error_feedback:
@@ -56,15 +68,36 @@ class _TopKBase(Compressor):
     def _masks(self, dW, dM, dV):
         raise NotImplementedError
 
+    def _kernel_path(self) -> bool:
+        return (not self.exact_topk) and \
+            S.use_kernel_path(self.sparsify_backend)
+
+    def _fused_compress(self, dW, dM, dV, with_residual):
+        """Kernel-path fused compress; SharedTopK only.  Returns
+        (sW, sM, sV, err_tree | None, shared mask) or None when the
+        compressor has no fused realization."""
+        return None
+
     def compress(self, deltas: Deltas, state):
         dW, dM, dV = deltas
         if state is not None:
             dW = tree_add(dW, state["err"])
-        mW, mM, mV = self._masks(dW, dM, dV)
-        sW = _cast_values(self.value_dtype, S.tree_sparsify(dW, mW))
-        sM = _cast_values(self.value_dtype, S.tree_sparsify(dM, mM))
-        sV = _cast_values(self.value_dtype, S.tree_sparsify(dV, mV))
-        new_state = {"err": tree_sub(dW, sW)} if state is not None else None
+        fused = self._fused_compress(dW, dM, dV, state is not None) \
+            if self._kernel_path() else None
+        if fused is not None:
+            # ONE streaming pass: mask apply on all three deltas, the
+            # value_dtype wire cast and the EF residual — instead of the
+            # 3-4 composed elementwise rounds below (docs/kernels.md)
+            sW, sM, sV, err, m = fused
+            mW = mM = mV = m
+            new_state = {"err": err} if state is not None else None
+        else:
+            mW, mM, mV = self._masks(dW, dM, dV)
+            sW = _cast_values(self.value_dtype, S.tree_sparsify(dW, mW))
+            sM = _cast_values(self.value_dtype, S.tree_sparsify(dM, mM))
+            sV = _cast_values(self.value_dtype, S.tree_sparsify(dV, mV))
+            new_state = {"err": tree_sub(dW, sW)} \
+                if state is not None else None
         diag = {
             "err_w": S.tree_sparsity_error(dW, mW),
             "err_m": S.tree_sparsity_error(dM, mM),
@@ -88,8 +121,16 @@ class SharedTopKCompressor(_TopKBase):
 
     def _masks(self, dW, dM, dV):
         m = masks.shared_mask(self.rule, dW, dM, dV, self.alpha,
-                              self.mask_scope, self.exact_topk)
+                              self.mask_scope, self.exact_topk,
+                              backend=self.sparsify_backend)
         return m, m, m
+
+    def _fused_compress(self, dW, dM, dV, with_residual):
+        score = masks.shared_score_tree(self.rule, dW, dM, dV)
+        sW, sM, sV, err, m = S.tree_shared_compress_fused(
+            score, dW, dM, dV, self.alpha, self.mask_scope,
+            value_dtype=self.value_dtype, with_residual=with_residual)
+        return sW, sM, sV, err, m
 
     def bits_per_client(self, d: int) -> int:
         return comm.bits_fedadam_ssm(d, S.k_for(d, self.alpha), 1,
@@ -105,8 +146,11 @@ class IndependentTopKCompressor(_TopKBase):
     transport = "independent_sparse"
 
     def _masks(self, dW, dM, dV):
+        # three distinct masks — no shared-mask fusion, but the mask
+        # construction itself still dispatches to the threshold kernel
         return masks.independent_masks(dW, dM, dV, self.alpha,
-                                       self.mask_scope, self.exact_topk)
+                                       self.mask_scope, self.exact_topk,
+                                       backend=self.sparsify_backend)
 
     def bits_per_client(self, d: int) -> int:
         return comm.bits_fedadam_top(d, S.k_for(d, self.alpha), 1,
@@ -119,7 +163,7 @@ def _shared_factory(rule):
             name=fed.algorithm, rule=rule, alpha=fed.alpha,
             mask_scope=fed.mask_scope, exact_topk=fed.exact_topk,
             error_feedback=fed.error_feedback, value_dtype=fed.value_dtype,
-            q_bits=fed.q_bits)
+            q_bits=fed.q_bits, sparsify_backend=fed.sparsify_backend)
     return factory
 
 
@@ -134,4 +178,5 @@ def _fedadam_top(fed) -> IndependentTopKCompressor:
     return IndependentTopKCompressor(
         name="fedadam_top", alpha=fed.alpha, mask_scope=fed.mask_scope,
         exact_topk=fed.exact_topk, error_feedback=fed.error_feedback,
-        value_dtype=fed.value_dtype, q_bits=fed.q_bits)
+        value_dtype=fed.value_dtype, q_bits=fed.q_bits,
+        sparsify_backend=fed.sparsify_backend)

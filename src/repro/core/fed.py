@@ -77,6 +77,10 @@ class FedConfig:
     adam: AdamHyper = AdamHyper()
     mask_scope: str = "per_tensor"        # per_tensor | global
     exact_topk: bool = True               # exact sort vs threshold bisection
+    # auto | kernel | reference — which sparsifier implementation the
+    # threshold masks use (core/sparsify.resolve_backend: auto routes TPU
+    # to the Pallas kernels; REPRO_SPARSIFY_BACKEND env overrides)
+    sparsify_backend: str = "auto"
     error_feedback: bool = False          # beyond-paper for sparse algos
     quant_bits: int = 8                   # efficient_adam
     onebit_warmup_rounds: int = 2

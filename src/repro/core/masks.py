@@ -33,29 +33,42 @@ _F32 = jnp.float32
 SHARED_RULES = ("ssm_w", "ssm_m", "ssm_v", "fairness_top")
 
 
-def shared_mask(rule: str, dW, dM, dV, alpha: float,
-                scope: str = "per_tensor", exact: bool = True):
+def shared_score_tree(rule: str, dW, dM, dV):
+    """Score tensors whose |.| the shared mask thresholds — the input to
+    both the mask construction here and the fused kernel compress path
+    (core/sparsify.tree_shared_compress_fused).  Returns ``None`` for
+    ``ssm_w``: the score IS dW, and the fused kernel then derives the
+    mask from the dW stream it already reads instead of streaming a
+    separate score tensor."""
     if rule == "ssm_w":
-        score = jax.tree.map(jnp.abs, dW)
-    elif rule == "ssm_m":
-        score = jax.tree.map(jnp.abs, dM)
-    elif rule == "ssm_v":
-        score = jax.tree.map(jnp.abs, dV)
-    elif rule == "fairness_top":
+        return None
+    if rule == "ssm_m":
+        return dM
+    if rule == "ssm_v":
+        return dV
+    if rule == "fairness_top":
         def union(w, m, v):
             def norm(x):
                 n = jnp.sqrt(jnp.sum(x.astype(_F32) ** 2)) + 1e-30
                 return jnp.abs(x.astype(_F32)) / n
             return jnp.maximum(norm(w), jnp.maximum(norm(m), norm(v)))
-        score = jax.tree.map(union, dW, dM, dV)
-    else:
-        raise ValueError(f"unknown shared mask rule {rule!r}")
-    return S.tree_topk_masks(score, alpha, scope=scope, exact=exact)
+        return jax.tree.map(union, dW, dM, dV)
+    raise ValueError(f"unknown shared mask rule {rule!r}")
+
+
+def shared_mask(rule: str, dW, dM, dV, alpha: float,
+                scope: str = "per_tensor", exact: bool = True,
+                backend=None):
+    score = shared_score_tree(rule, dW, dM, dV)
+    score = jax.tree.map(jnp.abs, dW if score is None else score)
+    return S.tree_topk_masks(score, alpha, scope=scope, exact=exact,
+                             backend=backend)
 
 
 def independent_masks(dW, dM, dV, alpha: float, scope: str = "per_tensor",
-                      exact: bool = True):
+                      exact: bool = True, backend=None):
     """FedAdam-Top: three separate Top_k masks."""
     mk = lambda t: S.tree_topk_masks(
-        jax.tree.map(jnp.abs, t), alpha, scope=scope, exact=exact)
+        jax.tree.map(jnp.abs, t), alpha, scope=scope, exact=exact,
+        backend=backend)
     return mk(dW), mk(dM), mk(dV)

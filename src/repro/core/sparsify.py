@@ -15,17 +15,61 @@ formulation; feasible when the model fits one host).
 
 These are the primitives under the top-k compressors in
 core/compressors/topk.py (see docs/compressors.md).
+
+Backend dispatch
+----------------
+Threshold-mask construction and the fused shared-mask compress have two
+interchangeable implementations: the streaming Pallas kernels
+(kernels/topk_mask + kernels/ssm_apply) and the pure-jnp references in
+this module.  :func:`resolve_backend` picks one — ``auto`` routes TPU to
+the kernels and everything else to the references; a ``FedConfig``/
+compressor ``sparsify_backend`` field or the ``REPRO_SPARSIFY_BACKEND``
+environment variable forces either (``kernel`` off-TPU runs the kernels
+in Pallas interpret mode, which is how CPU CI exercises them).  Rules
+and the fused-pass contract: docs/kernels.md.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import os
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.flatten_util import ravel_pytree
 
+from repro.kernels.ssm_apply.ops import ssm_apply_ef
+from repro.kernels.topk_mask.ops import select_tau_kernel, topk_mask_kernel
+
 _F32 = jnp.float32
+
+#: Environment override for the sparsifier backend (see resolve_backend).
+SPARSIFY_BACKEND_ENV = "REPRO_SPARSIFY_BACKEND"
+
+_BACKENDS = ("auto", "kernel", "reference")
+
+
+def resolve_backend(override: Optional[str] = None) -> str:
+    """Resolve the sparsifier backend to ``kernel`` | ``reference``.
+
+    Priority: explicit non-auto ``override`` (config) >
+    ``REPRO_SPARSIFY_BACKEND`` (env) > auto rule (TPU -> kernel,
+    CPU/GPU -> reference).  Off-TPU the kernel backend runs in Pallas
+    interpret mode (kernels/*/ops.py), so forcing ``kernel`` is valid —
+    and is exactly what the parity tests do."""
+    choice = (override or "auto").lower()
+    if choice == "auto":
+        choice = os.environ.get(SPARSIFY_BACKEND_ENV, "auto").lower()
+    if choice not in _BACKENDS:
+        raise ValueError(
+            f"sparsify backend {choice!r} not in {_BACKENDS}")
+    if choice == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "reference"
+    return choice
+
+
+def use_kernel_path(override: Optional[str] = None) -> bool:
+    return resolve_backend(override) == "kernel"
 
 
 def k_for(n: int, alpha: float) -> int:
@@ -128,15 +172,19 @@ def scatter_from_coo(values: jax.Array, idx: jax.Array, n: int,
 
 
 def tree_topk_masks(score_tree, alpha: float, scope: str = "per_tensor",
-                    exact: bool = True):
+                    exact: bool = True, backend: Optional[str] = None):
     """Boolean mask pytree selecting ~alpha of the elements of score_tree
     by magnitude.  scope="global" ranks across the whole flattened model
-    (the paper's Definition 1 applied to the full d-vector)."""
+    (the paper's Definition 1 applied to the full d-vector).  The
+    threshold (``exact=False``) production path dispatches per
+    :func:`resolve_backend`: the streaming 3-pass Pallas kernel, or the
+    jnp bisection reference."""
     def mk(s, k):
         if not exact:
-            # production path: O(n) streaming threshold bisection — no
-            # sort, O(1) temp memory (this is what the topk_mask Pallas
-            # kernel implements on TPU)
+            # production path: O(n) streaming threshold selection — no
+            # sort, O(1) temp memory
+            if use_kernel_path(backend):
+                return topk_mask_kernel(s, k)[0]
             return topk_mask_threshold(s, k)
         if s.size > BLOCK:
             return blocked_topk_mask(s, alpha)
@@ -174,3 +222,67 @@ def tree_sparsity_error(tree, masks):
 def tree_norm(tree):
     sq = jax.tree.map(lambda x: jnp.sum(x.astype(_F32) ** 2), tree)
     return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+# ---------------------------------------------------------------------------
+# Kernel-path fused shared-mask compress
+# ---------------------------------------------------------------------------
+
+
+def _fused_leaf(score, w, m, v, k: int, value_dtype, with_residual: bool):
+    """One leaf of the fused compress: 3-pass tau selection on the score
+    (== w when score is None), then ONE fused apply/cast/residual pass.
+    Returns (sw, sm, sv, err|None, mask)."""
+    tau, _ = select_tau_kernel(w if score is None else score, k)
+    outs = ssm_apply_ef(tau, w, m, v, score,
+                        with_residual=with_residual,
+                        value_dtype=value_dtype)
+    err = outs[3] if with_residual else None
+    # mask reconstructed for diagnostics only (never re-materialized by
+    # the kernel); XLA fuses this compare into the consuming reductions.
+    s = w if score is None else score
+    mask = jnp.abs(s.astype(_F32)) >= tau
+    return outs[0], outs[1], outs[2], err, mask
+
+
+def tree_shared_compress_fused(score_tree, dW, dM, dV, alpha: float,
+                               scope: str = "per_tensor", *,
+                               value_dtype=None,
+                               with_residual: bool = False):
+    """Fused kernel-path realization of the shared-mask compress: for
+    each leaf (or the raveled model when ``scope == "global"``), select
+    tau with the streaming topk_mask kernel and apply mask + optional
+    ``value_dtype`` wire cast + optional error-feedback residual in a
+    single ``ssm_apply_ef`` pass.
+
+    ``score_tree=None`` means the mask scores ARE ``|dW|`` (the paper's
+    optimal ssm_w rule) — the kernel then derives the mask from the dW
+    stream it is already reading instead of streaming a score tensor.
+
+    Returns ``(sW, sM, sV, err_tree | None, mask_tree)``; arithmetic is
+    bit-identical to the composed reference ops given the same tau
+    (asserted by tests/test_sparsify_dispatch.py)."""
+    if scope == "global":
+        flat_w, unravel = ravel_pytree(dW)
+        flat_m, _ = ravel_pytree(dM)
+        flat_v, _ = ravel_pytree(dV)
+        flat_s = None if score_tree is None else ravel_pytree(score_tree)[0]
+        sw, sm, sv, err, mask = _fused_leaf(
+            flat_s, flat_w, flat_m, flat_v, k_for(flat_w.size, alpha),
+            value_dtype, with_residual)
+        return (unravel(sw), unravel(sm), unravel(sv),
+                unravel(err) if err is not None else None,
+                unravel_bool(mask, dW))
+
+    w_leaves, treedef = jax.tree_util.tree_flatten(dW)
+    m_leaves = treedef.flatten_up_to(dM)
+    v_leaves = treedef.flatten_up_to(dV)
+    s_leaves = ([None] * len(w_leaves) if score_tree is None
+                else treedef.flatten_up_to(score_tree))
+    outs = [_fused_leaf(s, w, m, v, k_for(w.size, alpha), value_dtype,
+                        with_residual)
+            for s, w, m, v in zip(s_leaves, w_leaves, m_leaves, v_leaves)]
+    unflat = lambda i: jax.tree_util.tree_unflatten(
+        treedef, [o[i] for o in outs])
+    err_tree = unflat(3) if with_residual else None
+    return unflat(0), unflat(1), unflat(2), err_tree, unflat(4)

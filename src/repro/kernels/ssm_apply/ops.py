@@ -1,16 +1,23 @@
 """Wrapper: arbitrary shapes -> tiles -> fused mask-apply; combined with
 topk_mask.ops this is the full kernel-path sparsification:
 
-    mask, tau, _ = topk_mask_kernel(dW, k)
-    sW, sM, sV   = ssm_apply(tau, dW, dM, dV)
+    tau, _      = select_tau_kernel(dW, k)
+    sW, sM, sV, err = ssm_apply_ef(tau, dW, dM, dV)
+
+``ssm_apply`` is the original 3-in/3-out apply (kept for the mask-only
+consumers); ``ssm_apply_ef`` is the fused compress hot path used by the
+kernel-backend dispatch in core/sparsify.py — one streaming pass that
+also performs the error-feedback residual update and the optional
+``value_dtype`` wire cast (contract in docs/kernels.md).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ssm_apply.ref import ssm_apply_ref
-from repro.kernels.ssm_apply.ssm_apply import LANES, SUBLANES, ssm_apply_2d
+from repro.kernels.ssm_apply.ref import ssm_apply_ef_ref, ssm_apply_ref
+from repro.kernels.ssm_apply.ssm_apply import (
+    LANES, SUBLANES, ssm_apply_2d, ssm_apply_ef_2d)
 
 _TILE = SUBLANES * LANES
 
@@ -29,3 +36,27 @@ def ssm_apply(tau, dw, dm, dv):
                               interpret=_interpret())
     unprep = lambda x2, like: x2.reshape(-1)[:n].reshape(like.shape)
     return unprep(wo, dw), unprep(mo, dm), unprep(vo, dv)
+
+
+def ssm_apply_ef(tau, dw, dm, dv, score=None, *, with_residual=True,
+                 value_dtype=None):
+    """Fused compress pass over arbitrary-shaped (same-shape) tensors.
+
+    Returns ``(sw, sm, sv)`` or ``(sw, sm, sv, err)``.  ``score`` (the
+    tensor whose |.| the shared mask thresholds) defaults to ``dw``;
+    tensors below one (8, 1024) tile fall back to the composed-jnp
+    oracle, which is bit-identical by construction."""
+    n = dw.size
+    if n < _TILE:
+        return ssm_apply_ef_ref(tau, dw, dm, dv, score,
+                                with_residual=with_residual,
+                                value_dtype=value_dtype)
+    pad = (-n) % _TILE
+    prep = lambda x: jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, LANES)
+    outs = ssm_apply_ef_2d(
+        tau, prep(dw), prep(dm), prep(dv),
+        None if score is None else prep(score),
+        with_residual=with_residual, value_dtype=value_dtype,
+        interpret=_interpret())
+    unprep = lambda x2: x2.reshape(-1)[:n].reshape(dw.shape)
+    return tuple(unprep(o) for o in outs)

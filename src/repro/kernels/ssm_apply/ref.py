@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for ssm_apply."""
+"""Pure-jnp oracles for ssm_apply / ssm_apply_ef.
+
+``ssm_apply_ef_ref`` is the COMPOSED form of the fused kernel — the same
+arithmetic the reference compress path performs as separate elementwise
+rounds (mask apply x3, value_dtype round-trip, f32 residual subtract).
+The kernel must match it bit-exactly; tests/test_sparsify_dispatch.py
+asserts so.  It is also the small-tensor fallback of the ops.py wrapper.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -10,3 +17,21 @@ def ssm_apply_ref(tau, dw, dm, dv):
     return (jnp.where(keep, dw, z),
             jnp.where(keep, dm, z.astype(dm.dtype)),
             jnp.where(keep, dv, z.astype(dv.dtype)))
+
+
+def ssm_apply_ef_ref(tau, dw, dm, dv, score=None, *,
+                     with_residual=True, value_dtype=None):
+    """Composed-jnp oracle of ssm_apply_ef_2d (same output tuple)."""
+    s = dw if score is None else score
+    keep = jnp.abs(s.astype(jnp.float32)) >= tau
+    vdt = None if value_dtype is None else jnp.dtype(value_dtype)
+    cast = (lambda x: x) if vdt is None else \
+        (lambda x: x.astype(vdt).astype(x.dtype))
+    z = jnp.zeros((), dw.dtype)
+    sw = jnp.where(keep, cast(dw), z)
+    sm = jnp.where(keep, cast(dm), z.astype(dm.dtype))
+    sv = jnp.where(keep, cast(dv), z.astype(dv.dtype))
+    if not with_residual:
+        return sw, sm, sv
+    err = (dw.astype(jnp.float32) - sw.astype(jnp.float32)).astype(dw.dtype)
+    return sw, sm, sv, err

@@ -1,9 +1,19 @@
 """Fused shared-sparse-mask application (Algorithm 2 line 10).
 
-Given the shared threshold tau (from topk_mask over |dW|), produce the three
-sparse deltas in ONE streaming pass: a single |dW| >= tau compare drives all
-three selects — 3 loads + 3 stores per tile instead of three separate
-masked-select ops each re-reading dW for the mask.
+Given the shared threshold tau (from topk_mask over the score tensor),
+produce the three sparse deltas in ONE streaming pass: a single
+|score| >= tau compare drives all three selects — 3 loads + 3 stores per
+tile instead of three separate masked-select ops each re-reading the
+score for the mask.
+
+``ssm_apply_ef_2d`` is the full fused compress hot path: the same single
+pass additionally (a) casts kept values through an optional transport
+dtype (``value_dtype``, e.g. bf16 wire values carried in f32) and
+(b) emits the error-feedback residual ``dw - sw`` (exactly the composed
+``tree_sub(dW, sW)`` arithmetic: f32 subtract, cast back).  Without the
+fusion the compress path is 3-4 elementwise rounds over HBM (mask apply
+x3, cast, residual subtract); fused, every delta streams through VMEM
+once.  Contract and backend-dispatch rules: docs/kernels.md.
 """
 from __future__ import annotations
 
@@ -44,3 +54,68 @@ def ssm_apply_2d(tau, dw, dm, dv, *, interpret: bool = True):
         out_shape=out_shape,
         interpret=interpret,
     )(jnp.asarray([tau], jnp.float32), dw, dm, dv)
+
+
+def _make_ef_kernel(has_score: bool, with_residual: bool, value_dtype):
+    """Kernel body for the fused compress pass.  Static shape:
+    inputs  [score?], dw, dm, dv
+    outputs sw, sm, sv, [err?]
+    keep = |score or dw| >= tau; kept values round-trip through
+    ``value_dtype``; err = (dw - sw) in f32, cast back to dw's dtype."""
+    vdt = None if value_dtype is None else jnp.dtype(value_dtype)
+
+    def cast(x):
+        return x if vdt is None else x.astype(vdt).astype(x.dtype)
+
+    def body(tau_ref, *refs):
+        if has_score:
+            score, refs = refs[0], refs[1:]
+        w_ref, m_ref, v_ref = refs[:3]
+        outs = refs[3:]
+        if not has_score:
+            score = w_ref
+        keep = jnp.abs(score[...].astype(jnp.float32)) >= tau_ref[0]
+        w = w_ref[...]
+        zero = jnp.zeros((), w.dtype)
+        sw = jnp.where(keep, cast(w), zero)
+        outs[0][...] = sw
+        outs[1][...] = jnp.where(keep, cast(m_ref[...]),
+                                 zero.astype(m_ref.dtype))
+        outs[2][...] = jnp.where(keep, cast(v_ref[...]),
+                                 zero.astype(v_ref.dtype))
+        if with_residual:
+            outs[3][...] = (w.astype(jnp.float32) - sw.astype(jnp.float32)
+                            ).astype(w.dtype)
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("with_residual", "value_dtype",
+                                             "interpret"))
+def ssm_apply_ef_2d(tau, dw, dm, dv, score=None, *,
+                    with_residual: bool = True, value_dtype=None,
+                    interpret: bool = True):
+    """Fused compress pass over (R, LANES) tiles.
+
+    Returns ``(sw, sm, sv)`` or ``(sw, sm, sv, err)`` when
+    ``with_residual``.  ``score`` defaults to ``dw`` (the paper's ssm_w
+    rule) without streaming it twice; pass a distinct score tensor for
+    the ssm_m / ssm_v / fairness_top mask rules."""
+    has_score = score is not None
+    grid = (dw.shape[0] // SUBLANES,)
+    spec = pl.BlockSpec(BLOCK, lambda i, s: (i, 0))
+    ins = ([score] if has_score else []) + [dw, dm, dv]
+    outs = [dw, dm, dv] + ([dw] if with_residual else [])
+    out_shape = tuple(jax.ShapeDtypeStruct(t.shape, t.dtype) for t in outs)
+    res = pl.pallas_call(
+        _make_ef_kernel(has_score, with_residual, value_dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec] * len(ins),
+            out_specs=tuple([spec] * len(outs)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(jnp.asarray([tau], jnp.float32), *ins)
+    return res

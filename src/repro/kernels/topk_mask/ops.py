@@ -1,10 +1,19 @@
 """jit'd wrapper: 3-pass streaming threshold top-k mask.
 
-Returns (mask, tau, achieved_count).  Count semantics: >= k, over-selecting
-by at most one refinement bin (<=3% of k worst case); ties at tau share the
-mask.  Precision note: per-tile counts are f32 (exact to 2^24 per tile —
-tiles are 8192 elements, so exact), and the cross-tile accumulation is an
-f32 add chain whose error is << 1 count for d <= 2^40.
+``select_tau_kernel`` runs the selection passes only (absmax -> log2
+histogram -> linear refine) and returns ``(tau, achieved_count)``; the
+fused compress path (kernels/ssm_apply/ops.py:ssm_apply_ef) consumes tau
+directly and never materializes the mask.  ``topk_mask_kernel`` adds the
+elementwise apply pass and returns ``(mask, tau, achieved_count)``.
+
+Count semantics: >= k, over-selecting by at most one refinement bin —
+the bin width is ~1.4% of tau (half-octave bracket / 31 linear bins), so
+the count overshoot scales with the |x|-density at tau: <0.5% of k for
+typical delta distributions, enforced at ``overselect_bound(k)``
+(6% of k + 8) as the contract.  Ties at tau share the mask.  Precision note: per-tile counts are f32 (exact to 2^24
+per tile — tiles are 8192 elements, so exact), and the cross-tile
+accumulation is an f32 add chain whose error is << 1 count for d <= 2^40.
+Algorithm walkthrough and the guarantee's derivation: docs/kernels.md.
 """
 from __future__ import annotations
 
@@ -22,8 +31,21 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def topk_mask_kernel(x, k: int):
-    """x: any shape; k: static int.  Returns (mask bool, tau, count)."""
+def overselect_bound(k: int, n: int | None = None) -> int:
+    """Contracted worst-case ``achieved_count - k`` of the 3-pass
+    selection: one linear refinement bin of a half-octave bracket (bin
+    width ~1.4% of tau; the count overshoot it admits depends on the
+    |x|-density at tau — ~4% of k for a Gaussian at alpha=0.05), bounded
+    at 6% of k plus a small absolute slack for ties/degenerate brackets
+    at tiny k.  Tests and the benchmark harness assert against THIS
+    function so the code and docs/kernels.md can never drift apart."""
+    bound = int(0.06 * k) + 8
+    return min(bound, (n - k) if n is not None else bound)
+
+
+def select_tau_kernel(x, k: int):
+    """x: any shape; k: static int.  Selection passes only.
+    Returns (tau f32 scalar, achieved_count f32 scalar)."""
     n = x.size
     pad = (-n) % _TILE
     flat = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, LANES)
@@ -41,8 +63,16 @@ def topk_mask_kernel(x, k: int):
     idx2 = jnp.argmax(counts2 >= k)
     tau = taus2[idx2]
     tau = jnp.where(k >= n, jnp.zeros((), jnp.float32), tau)
-    count = counts2[idx2]
+    count = jnp.where(k >= n, jnp.asarray(n, jnp.float32), counts2[idx2])
+    return tau, count
 
-    mask = apply_mask_2d(tau, flat, interpret=interp)
+
+def topk_mask_kernel(x, k: int):
+    """x: any shape; k: static int.  Returns (mask bool, tau, count)."""
+    n = x.size
+    tau, count = select_tau_kernel(x, k)
+    pad = (-n) % _TILE
+    flat = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, LANES)
+    mask = apply_mask_2d(tau, flat, interpret=_interpret())
     mask = mask.reshape(-1)[:n].reshape(x.shape).astype(bool)
     return mask, tau, count

@@ -18,8 +18,9 @@ needs a *threshold* tau with count(|x| >= tau) ~ k.  TPU-native selection:
 
 Each pass is one streaming read of x: O(d) total, no sort, no layout
 change.  Count exactness: the final tau over-selects by at most the
-refinement-bin width (~3% of k worst-case, <0.5% typical); ties share the
-bin edge.  The ops.py wrapper reports the achieved count.
+refinement-bin width (<0.5% of k typical; contract bound
+``ops.overselect_bound`` = 6% of k + 8); ties share the bin edge.  The
+ops.py wrapper reports the achieved count.
 """
 from __future__ import annotations
 

@@ -104,7 +104,8 @@ def build_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
                      local_epochs: int = 2, remat: str = "full",
                      aggregate: Optional[str] = None,
                      plan: Optional[shd.DeployPlan] = None,
-                     lr: float = 1e-3) -> StepBundle:
+                     lr: float = 1e-3,
+                     sparsify_backend: str = "auto") -> StepBundle:
     multi_pod = "pod" in mesh.shape
     plan = plan or shd.plan_for(cfg.name)
     caxes = shd.client_axes(multi_pod)
@@ -136,9 +137,12 @@ def build_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
         algorithm=algorithm, alpha=alpha, local_epochs=local_epochs,
         n_clients=n_clients, adam=AdamHyper(lr=lr),
         client_mode=client_mode, aggregate=aggregate,
-        # production masks: O(d) threshold bisection (the topk_mask kernel
-        # path) — sort-based exact top-k is the small-model/test path
+        # production masks: O(d) streaming threshold selection — on TPU
+        # the backend dispatch (core/sparsify.resolve_backend) routes
+        # these through the topk_mask + fused ssm_apply_ef Pallas
+        # kernels; sort-based exact top-k is the small-model/test path
         exact_topk=False, mask_scope="per_tensor",
+        sparsify_backend=sparsify_backend,
         client_axes=(caxes if client_mode == "vmap" else None))
 
     n_front = _front_len(cfg, shape.seq_len)

@@ -64,6 +64,13 @@ def main() -> None:
     ap.add_argument("--iid", action="store_true")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--kernel-adam", action="store_true")
+    ap.add_argument("--threshold-topk", action="store_true",
+                    help="production O(d) threshold masks instead of "
+                         "exact sort-based top-k")
+    ap.add_argument("--sparsify-backend", default="auto",
+                    choices=("auto", "kernel", "reference"),
+                    help="threshold-mask implementation (docs/kernels.md; "
+                         "kernel = Pallas, interpret mode off-TPU)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -77,7 +84,9 @@ def main() -> None:
         algorithm=args.algorithm, alpha=args.alpha,
         local_epochs=args.local_epochs, n_clients=args.clients,
         adam=AdamHyper(lr=args.lr), client_mode="scan",
-        use_kernel_adam=args.kernel_adam)
+        use_kernel_adam=args.kernel_adam,
+        exact_topk=not args.threshold_topk,
+        sparsify_backend=args.sparsify_backend)
     comp = make_compressor(fed)
     print(f"[train] {cfg.name}: {n_params/1e6:.2f}M params, "
           f"{args.clients} clients, L={args.local_epochs}, "

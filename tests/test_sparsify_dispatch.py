@@ -1,0 +1,247 @@
+"""Kernel-vs-reference parity for the sparsifier backend dispatch
+(core/sparsify.resolve_backend + the fused compress path).
+
+Runs entirely in Pallas interpret mode (the kernels' ops.py wrappers
+interpret automatically off-TPU), so CPU CI exercises the real kernel
+code paths.  Contract under test (docs/kernels.md):
+
+* backend resolution: config override > REPRO_SPARSIFY_BACKEND env >
+  auto (TPU -> kernel, else reference);
+* kernel threshold masks agree with the exact top-k support within the
+  documented over-selection bound (``overselect_bound``) and are level
+  sets of |score|;
+* the fused ``ssm_apply_ef`` pass is BIT-EXACT against the composed jnp
+  ops (mask apply, ``value_dtype`` round-trip, f32 residual subtract)
+  given the same tau — including the error-feedback residual;
+* odd / tile-padded / multi-dim shapes and bf16/f32 dtypes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import masks, sparsify as S
+from repro.core.compressors.base import Deltas, tree_add, tree_sub
+from repro.core.compressors.topk import (IndependentTopKCompressor,
+                                         SharedTopKCompressor)
+from repro.kernels.ssm_apply.ref import ssm_apply_ef_ref
+from repro.kernels.topk_mask.ops import overselect_bound, select_tau_kernel
+
+# odd (non-tile), padded (not a multiple of 8*1024), exact-tile, multi-dim
+SHAPES = [(37,), (3, 5, 7), (8, 1024), (50_000,), (20_011,)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+ALPHA = 0.05
+
+
+def _tree(key, dtype=jnp.float32, shapes=SHAPES):
+    ks = jax.random.split(key, len(shapes))
+    return {f"l{i}": jax.random.normal(k, s).astype(dtype)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+# ---------------------------------------------------------------------------
+# Backend resolution
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_backend_precedence(monkeypatch):
+    monkeypatch.delenv(S.SPARSIFY_BACKEND_ENV, raising=False)
+    # auto rule: this suite runs off-TPU -> reference
+    assert S.resolve_backend() == "reference"
+    assert S.resolve_backend("auto") == "reference"
+    # env overrides auto
+    monkeypatch.setenv(S.SPARSIFY_BACKEND_ENV, "kernel")
+    assert S.resolve_backend() == "kernel"
+    # explicit config override beats env
+    assert S.resolve_backend("reference") == "reference"
+    with pytest.raises(ValueError):
+        S.resolve_backend("cuda")
+    monkeypatch.setenv(S.SPARSIFY_BACKEND_ENV, "nonsense")
+    with pytest.raises(ValueError):
+        S.resolve_backend()
+
+
+def test_fedconfig_plumbs_backend():
+    from repro.core.compressors import make_compressor
+    from repro.core.fed import FedConfig
+    fed = FedConfig(algorithm="fedadam_ssm", exact_topk=False,
+                    sparsify_backend="kernel")
+    comp = make_compressor(fed)
+    assert comp.sparsify_backend == "kernel"
+    assert comp._kernel_path()
+    # exact sort masks have no kernel realization -> composed path
+    fed = FedConfig(algorithm="fedadam_top", exact_topk=True,
+                    sparsify_backend="kernel")
+    assert not make_compressor(fed)._kernel_path()
+
+
+# ---------------------------------------------------------------------------
+# Mask support parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_kernel_masks_support_within_tolerance(dtype):
+    tree = _tree(jax.random.PRNGKey(0), dtype)
+    mk = S.tree_topk_masks(jax.tree.map(jnp.abs, tree), ALPHA,
+                           exact=False, backend="kernel")
+    for name, x in tree.items():
+        k = S.k_for(x.size, ALPHA)
+        cnt = int(mk[name].sum())
+        assert k <= cnt <= k + overselect_bound(k, x.size), (name, cnt, k)
+        a = jnp.abs(x.astype(jnp.float32))
+        kept_min = jnp.min(jnp.where(mk[name], a, jnp.inf))
+        drop_max = jnp.max(jnp.where(mk[name], -jnp.inf, a))
+        assert float(kept_min) >= float(drop_max) - 1e-6
+
+
+def test_kernel_vs_reference_masks_agree_on_support():
+    """Both backends produce level-set masks of the same scores: they may
+    disagree only inside the over-selection band near tau."""
+    tree = _tree(jax.random.PRNGKey(1))
+    score = jax.tree.map(jnp.abs, tree)
+    mk = S.tree_topk_masks(score, ALPHA, exact=False, backend="kernel")
+    mr = S.tree_topk_masks(score, ALPHA, exact=False, backend="reference")
+    for name, x in tree.items():
+        k = S.k_for(x.size, ALPHA)
+        sym_diff = int(jnp.sum(mk[name] ^ mr[name]))
+        assert sym_diff <= 2 * overselect_bound(k, x.size), (name, sym_diff)
+        # the top-k/2 by magnitude are in BOTH masks (deep inside the band)
+        top = S.topk_mask_exact(x, max(1, k // 2))
+        assert bool(jnp.all(jnp.where(top, mk[name], True)))
+        assert bool(jnp.all(jnp.where(top, mr[name], True)))
+
+
+# ---------------------------------------------------------------------------
+# Fused compress: bit-exact vs composed jnp ops
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("value_dtype", [None, "bfloat16"])
+def test_fused_compress_bit_exact_vs_composed(dtype, value_dtype):
+    key = jax.random.PRNGKey(2)
+    dW = _tree(key, dtype)
+    dM = jax.tree.map(lambda x: x * jnp.asarray(0.1, x.dtype), dW)
+    dV = jax.tree.map(jnp.abs, _tree(jax.random.PRNGKey(3), dtype))
+
+    sW, sM, sV, err, mask = S.tree_shared_compress_fused(
+        None, dW, dM, dV, ALPHA, value_dtype=value_dtype,
+        with_residual=True)
+
+    for name in dW:
+        w, m, v = dW[name], dM[name], dV[name]
+        tau, _ = select_tau_kernel(w, S.k_for(w.size, ALPHA))
+        rw, rm, rv, rerr = ssm_apply_ef_ref(tau, w, m, v,
+                                            value_dtype=value_dtype)
+        for got, want in ((sW[name], rw), (sM[name], rm), (sV[name], rv),
+                          (err[name], rerr)):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want), err_msg=name)
+        # and vs the tree-level composed ops the reference path uses
+        keep = jnp.abs(w.astype(jnp.float32)) >= tau
+        assert bool(jnp.all(mask[name] == keep))
+    comp_sW = jax.tree.map(
+        lambda x, mm: jnp.where(mm, x, jnp.zeros((), x.dtype)), dW, mask)
+    if value_dtype is not None:
+        vdt = jnp.dtype(value_dtype)
+        comp_sW = jax.tree.map(lambda x: x.astype(vdt).astype(x.dtype),
+                               comp_sW)
+    comp_err = tree_sub(dW, comp_sW)
+    for name in dW:
+        np.testing.assert_array_equal(np.asarray(err[name]),
+                                      np.asarray(comp_err[name]))
+
+
+def test_shared_compressor_kernel_path_bit_exact_ef(monkeypatch):
+    """End-to-end: SharedTopKCompressor on the kernel backend carries a
+    residual bit-identical to the composed ops over its own masks, and a
+    second round consumes it (EF input = deltas + residual)."""
+    monkeypatch.setenv(S.SPARSIFY_BACKEND_ENV, "kernel")
+    dW = _tree(jax.random.PRNGKey(4))
+    dM = jax.tree.map(lambda x: x * 0.1, dW)
+    dV = jax.tree.map(jnp.abs, _tree(jax.random.PRNGKey(5)))
+    deltas = Deltas(dW, dM, dV)
+    comp = SharedTopKCompressor(alpha=ALPHA, exact_topk=False,
+                                error_feedback=True,
+                                value_dtype="bfloat16")
+    assert comp._kernel_path()
+    state = comp.init_state(dW)
+    packed, state1, _ = comp.compress(deltas, state)
+
+    comp_err = tree_sub(dW, packed.W)
+    for name in dW:
+        np.testing.assert_array_equal(np.asarray(state1["err"][name]),
+                                      np.asarray(comp_err[name]))
+        # shared support: M and V vanish exactly where W does
+        zw = np.asarray(packed.W[name]) == 0
+        assert (np.asarray(packed.M[name])[zw] == 0).all()
+        assert (np.asarray(packed.V[name])[zw] == 0).all()
+
+    # round 2: the EF-adjusted input is deltas + residual
+    packed2, _, _ = comp.compress(deltas, state1)
+    dW_eff = tree_add(dW, state1["err"])
+    tau, _ = select_tau_kernel(dW_eff["l3"], S.k_for(dW["l3"].size, ALPHA))
+    rw = ssm_apply_ef_ref(tau, dW_eff["l3"], dM["l3"], dV["l3"],
+                          value_dtype="bfloat16")[0]
+    np.testing.assert_array_equal(np.asarray(packed2.W["l3"]),
+                                  np.asarray(rw))
+
+
+@pytest.mark.parametrize("rule", ["ssm_m", "fairness_top"])
+def test_fused_compress_score_rules(rule, monkeypatch):
+    """Non-ssm_w rules stream a separate score tensor; mask must come
+    from that score, applied to all three deltas."""
+    monkeypatch.setenv(S.SPARSIFY_BACKEND_ENV, "kernel")
+    dW = _tree(jax.random.PRNGKey(6))
+    dM = _tree(jax.random.PRNGKey(7))
+    dV = jax.tree.map(jnp.abs, _tree(jax.random.PRNGKey(8)))
+    comp = SharedTopKCompressor(rule=rule, alpha=ALPHA, exact_topk=False)
+    packed, _, _ = comp.compress(Deltas(dW, dM, dV), None)
+    score = masks.shared_score_tree(rule, dW, dM, dV)
+    for name in dW:
+        k = S.k_for(dW[name].size, ALPHA)
+        tau, _ = select_tau_kernel(score[name], k)
+        keep = jnp.abs(score[name].astype(jnp.float32)) >= tau
+        np.testing.assert_array_equal(
+            np.asarray(packed.W[name]),
+            np.asarray(jnp.where(keep, dW[name], 0)), err_msg=name)
+
+
+def test_global_scope_kernel_parity():
+    dW = _tree(jax.random.PRNGKey(9))
+    dM = jax.tree.map(lambda x: x * 0.1, dW)
+    dV = jax.tree.map(jnp.abs, dW)
+    sW, _, _, err, mask = S.tree_shared_compress_fused(
+        None, dW, dM, dV, ALPHA, scope="global", with_residual=True)
+    d = sum(x.size for x in jax.tree.leaves(dW))
+    k = S.k_for(d, ALPHA)
+    kept = sum(int(m.sum()) for m in jax.tree.leaves(mask))
+    assert k <= kept <= k + overselect_bound(k, d)
+    # one global tau: kept min across ALL leaves >= dropped max
+    a = jnp.concatenate([jnp.abs(x.reshape(-1)) for x in
+                         jax.tree.leaves(dW)])
+    mflat = jnp.concatenate([m.reshape(-1) for m in jax.tree.leaves(mask)])
+    assert float(jnp.min(jnp.where(mflat, a, jnp.inf))) >= \
+        float(jnp.max(jnp.where(mflat, -jnp.inf, a))) - 1e-6
+    # residual + kept values reassemble the input exactly (vdt=None)
+    recon = tree_add(sW, err)
+    for name in dW:
+        np.testing.assert_allclose(np.asarray(recon[name]),
+                                   np.asarray(dW[name]), atol=1e-6)
+
+
+def test_independent_compressor_kernel_masks(monkeypatch):
+    monkeypatch.setenv(S.SPARSIFY_BACKEND_ENV, "kernel")
+    dW = _tree(jax.random.PRNGKey(10))
+    dM = _tree(jax.random.PRNGKey(11))
+    dV = jax.tree.map(jnp.abs, _tree(jax.random.PRNGKey(12)))
+    comp = IndependentTopKCompressor(alpha=ALPHA, exact_topk=False)
+    packed, _, _ = comp.compress(Deltas(dW, dM, dV), None)
+    for tree, carrier in ((dW, packed.W), (dM, packed.M), (dV, packed.V)):
+        for name, x in tree.items():
+            k = S.k_for(x.size, ALPHA)
+            kept = int(jnp.sum(carrier[name] != 0))
+            # random normals: no collisions with exact zero
+            assert kept <= k + overselect_bound(k, x.size), (name, kept)
+            assert kept >= int(0.9 * k)

@@ -19,6 +19,18 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_DIRS = {".git", ".github", "node_modules", "__pycache__"}
 EXTERNAL = ("http://", "https://", "mailto:")
 
+#: The docs surface every PR must keep present (and thereby scanned):
+#: rglob("*.md") only covers what exists, so a deleted doc would
+#: otherwise silently shrink coverage.
+REQUIRED_DOCS = (
+    "README.md",
+    "EXPERIMENTS.md",
+    "docs/ARCHITECTURE.md",
+    "docs/compressors.md",
+    "docs/kernels.md",
+    "docs/benchmarks.md",
+)
+
 
 def _squash(text: str) -> str:
     """Loose slug: lowercase alphanumerics only (GitHub's exact slug
@@ -38,6 +50,9 @@ def _headings(md: Path) -> set:
 
 def check(root: Path) -> int:
     errors = []
+    for rel in REQUIRED_DOCS:
+        if not (root / rel).exists():
+            errors.append(f"required doc missing: {rel}")
     md_files = [p for p in root.rglob("*.md")
                 if not any(part in SKIP_DIRS or part.startswith(".")
                            for part in p.relative_to(root).parts[:-1])]
