@@ -35,6 +35,7 @@ from jax import lax
 from jax.sharding import PartitionSpec
 
 from repro.core import sparsify as S
+from repro.kernels.topk_mask.ops import overselect_bound
 
 _F32 = jnp.float32
 
@@ -66,10 +67,13 @@ def _to_blocks(x_c, n):
 
 def _capacity(n, B, alpha):
     """Per-block packed capacity: threshold masks over-select by ties/bin
-    width, so give ~8% headroom over alpha*B (overflow beyond capacity is
-    dropped and accounted — reported by fed metrics)."""
-    base = S.k_for(B, alpha) if n > B else S.k_for(n, alpha)
-    return min(B if n > B else n, int(base * 1.08) + 8)
+    width, so size the pack for the kernel contract's worst case —
+    ``k + overselect_bound(k)`` (kernels/topk_mask/ops.py, the single
+    source of truth; see docs/kernels.md).  Overflow beyond capacity is
+    dropped and accounted — reported by fed metrics."""
+    size = B if n > B else n
+    base = S.k_for(size, alpha)
+    return min(size, base + overselect_bound(base))
 
 
 def _pack(x_c, n, alpha, *, sort_free: bool = True):
@@ -175,7 +179,9 @@ def sparse_shared_gather_sum(sW_c, sM_c, sV_c, alpha, weights,
 def _local_pack(wf, alpha):
     """wf: (n_loc,) masked dense, device-local.  -> (vals, idx, valid)."""
     n = wf.shape[0]
-    kb = min(n, int(S.k_for(n, alpha) * 1.08) + 8)
+    # capacity per the over-selection contract, as in _capacity above
+    k = S.k_for(n, alpha)
+    kb = min(n, k + overselect_bound(k))
     m = wf != 0
     pos = jnp.cumsum(m.astype(jnp.int32)) - 1
     keep = m & (pos < kb)

@@ -102,6 +102,15 @@ class FedConfig:
         assert self.algorithm in compressors.available(), self.algorithm
 
 
+def active_client_count(fed: FedConfig) -> int:
+    """Clients sampled per round: ``round(participation * n_clients)``,
+    never below one.  THE single site where the participation fraction
+    meets host ``int()`` math — it runs at round-*build* time and its
+    value is closed over by the jitted round body, so the cast can never
+    see a tracer (the jit-hazard lint rule guards the round body)."""
+    return max(1, int(round(fed.participation * fed.n_clients)))
+
+
 class FedState(NamedTuple):
     W: Any                                # global model
     M: Any                                # global first moments
@@ -203,6 +212,7 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
     FedAvg weights |D_n| (defaults to uniform).
     """
     comp = compressors.make_compressor(fed)
+    n_active = active_client_count(fed)
     if fed.client_mode != "scan" and fed.client_axes is not None:
         # the shard_map spatial driver does not thread per-client state
         # (round_shardmap passes cstate=None); fail fast rather than
@@ -368,13 +378,13 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
         if weights is None:
             weights = jnp.ones((C,), _F32)
         if fed.participation < 1.0:
-            # sample ceil(p*C) clients by weight masking (static shapes);
-            # rng defaults to the round counter for reproducibility
-            m = max(1, int(round(fed.participation * C)))
+            # sample the active_client_count clients by weight masking
+            # (static shapes); rng defaults to the round counter for
+            # reproducibility
             key = rng if rng is not None else \
                 jax.random.fold_in(jax.random.PRNGKey(17), state.round)
             perm = jax.random.permutation(key, C)
-            active = jnp.zeros((C,), _F32).at[perm[:m]].set(1.0)
+            active = jnp.zeros((C,), _F32).at[perm[:n_active]].set(1.0)
             weights = weights * active
         if fed.client_mode == "scan":
             driver = round_scan
@@ -414,10 +424,8 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
         # metric is produced by the same object that produced the payload
         d = sum(x.size for x in jax.tree.leaves(state.W))
         mets = dict(mets)
-        active_clients = (max(1, int(round(fed.participation * C)))
-                          if fed.participation < 1.0 else C)
         mets["uplink_bits"] = jnp.asarray(
-            active_clients * comp.bits_per_client(d), _F32)
+            n_active * comp.bits_per_client(d), _F32)
         new_state = FedState(W=W_new, M=M_new, V=V_new,
                              round=state.round + 1, client_state=new_cs)
         return new_state, mets

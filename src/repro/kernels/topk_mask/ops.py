@@ -10,7 +10,9 @@ Count semantics: >= k, over-selecting by at most one refinement bin —
 the bin width is ~1.4% of tau (half-octave bracket / 31 linear bins), so
 the count overshoot scales with the |x|-density at tau: <0.5% of k for
 typical delta distributions, enforced at ``overselect_bound(k)``
-(6% of k + 8) as the contract.  Ties at tau share the mask.  Precision note: per-tile counts are f32 (exact to 2^24
+(6% of k + 8) as the contract.  Ties at tau share the mask.
+
+Precision note: per-tile counts are f32 (exact to 2^24
 per tile — tiles are 8192 elements, so exact), and the cross-tile
 accumulation is an f32 add chain whose error is << 1 count for d <= 2^40.
 Algorithm walkthrough and the guarantee's derivation: docs/kernels.md.

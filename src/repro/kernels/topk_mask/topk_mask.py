@@ -56,7 +56,11 @@ def absmax_2d(x, *, interpret: bool = True):
         _absmax_kernel,
         grid=grid,
         in_specs=[pl.BlockSpec(BLOCK, lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        # deliberately sub-tile: a (1, 1) running-max accumulator the
+        # grid revisits every step — scalar, SMEM-resident, not a
+        # streamed VMEM vector tile
+        out_specs=pl.BlockSpec(  # repro-lint: disable=pallas-contract
+            (1, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
         interpret=interpret,
     )(x)
@@ -88,7 +92,10 @@ def count_ge_2d(taus, x, *, interpret: bool = True):
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[pl.BlockSpec(BLOCK, lambda i, s: (i, 0))],
-            out_specs=pl.BlockSpec((1, N_BINS), lambda i, s: (0, 0)),
+            # deliberately sub-tile: the (1, N_BINS) histogram
+            # accumulator is revisited every grid step, not streamed
+            out_specs=pl.BlockSpec(  # repro-lint: disable=pallas-contract
+                (1, N_BINS), lambda i, s: (0, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((1, N_BINS), jnp.float32),
         interpret=interpret,

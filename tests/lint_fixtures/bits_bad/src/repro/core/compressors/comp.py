@@ -1,0 +1,35 @@
+"""Known-bad bits-accounting fixture: a registered compressor without a
+real bits_per_client, plus doc-table drift in both directions."""
+
+
+def register(name):
+    def deco(factory):
+        return factory
+    return deco
+
+
+class Compressor:
+    def bits_per_client(self, d):
+        raise NotImplementedError
+
+
+class NoBitsCompressor(Compressor):
+    """Defines nothing: inherits only the pure-raise protocol stub."""
+
+    def compress(self, deltas, state):
+        return deltas, state, 0
+
+
+@register("no_bits")
+def _no_bits_factory(fed):
+    return NoBitsCompressor()
+
+
+class FineCompressor(Compressor):
+    def bits_per_client(self, d):
+        return 32 * d
+
+
+@register("undocumented")
+def _fine_factory(fed):
+    return FineCompressor()

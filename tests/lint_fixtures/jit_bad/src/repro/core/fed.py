@@ -1,0 +1,15 @@
+"""Known-bad jit fixture: every hazard class inside a traced round."""
+import jax.numpy as jnp
+
+
+def make_round(cfg):
+    def round_fn(state, thresh):
+        k = int(thresh * 10)              # host cast on a traced param
+        s = state.sum().item()            # device sync
+        import numpy as np
+        arr = np.asarray(state)           # host transfer
+        if thresh > 0.5:                  # data-dependent control flow
+            state = state * 2.0
+        return state + k + s + arr.sum()
+
+    return round_fn

@@ -1,0 +1,35 @@
+"""Known-bad pallas fixture: a misaligned BlockSpec tile and a
+VMEM-budget blowout in one pallas_call each."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024
+SUBLANES = 8
+BLOCK = (SUBLANES, LANES)
+HUGE = (4096, 4096)
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def misaligned(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(BLOCK, lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((3, 100), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((3, 100), jnp.float32),
+    )(x)
+
+
+def vmem_hog(x):
+    spec = pl.BlockSpec(HUGE, lambda i: (0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(HUGE, jnp.float32),
+    )(x)

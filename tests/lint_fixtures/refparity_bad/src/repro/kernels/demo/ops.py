@@ -1,0 +1,10 @@
+"""Known-bad ref-parity fixture: an op with no oracle and no test."""
+import jax.numpy as jnp
+
+
+def orphan_kernel(x):
+    return jnp.abs(x)
+
+
+def tested_only(x):
+    return jnp.sign(x)

@@ -1,0 +1,8 @@
+"""References tested_only in code; mentions orphan_kernel in a docstring
+only (must NOT count as a reference)."""
+from repro.kernels.demo.ops import tested_only
+
+
+def test_tested_only():
+    """orphan_kernel is named here but never exercised."""
+    assert tested_only is not None

@@ -1,0 +1,14 @@
+"""Known-good ref-parity fixture: op + oracle + test reference."""
+import jax.numpy as jnp
+
+
+def scale_kernel(x):
+    return jnp.abs(x) * 2.0
+
+
+def _helper(x):
+    return x  # private: exempt
+
+
+def plain_constant(k):
+    return k + 1  # no jax/jnp: a contract constant, exempt

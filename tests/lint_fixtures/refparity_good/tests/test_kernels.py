@@ -1,0 +1,6 @@
+from repro.kernels.demo.ops import scale_kernel
+from repro.kernels.demo.ref import scale_ref
+
+
+def test_scale_parity():
+    assert scale_kernel(1.0) == scale_ref(1.0)

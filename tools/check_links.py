@@ -29,6 +29,7 @@ REQUIRED_DOCS = (
     "docs/compressors.md",
     "docs/kernels.md",
     "docs/benchmarks.md",
+    "docs/linting.md",
 )
 
 

@@ -1,0 +1,14 @@
+"""repro-lint: stdlib-ast static analysis guarding the repo's contracts.
+
+Four rules (see docs/linting.md):
+
+* ``pallas-contract``  — BlockSpec tile alignment + per-launch VMEM budget
+* ``jit-hazard``       — host-sync / recompile triggers inside traced code
+* ``ref-parity``       — every public kernel op has a ref.py oracle and a
+  parity test that references it
+* ``bits-accounting``  — registry / ``bits_per_client`` / docs-table drift
+
+Run ``python -m tools.lint --help``.  No third-party dependencies; the
+analyzed code is never imported.
+"""
+from tools.lint.core import Finding, LintResult, run_lint  # noqa: F401

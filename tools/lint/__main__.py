@@ -1,0 +1,81 @@
+"""CLI: ``python -m tools.lint [--json] [--root DIR] ...``.
+
+Exit codes: 0 = clean (possibly via baseline/suppressions), 1 = findings
+or stale baseline entries, 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.lint import core
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="repro-lint: static contract checks (see "
+                    "docs/linting.md)")
+    parser.add_argument("--root", type=Path,
+                        default=Path(__file__).resolve().parents[2],
+                        help="repo root to lint (default: this repo)")
+    parser.add_argument("--json", action="store_true",
+                        help="machine-readable JSON report on stdout")
+    parser.add_argument("--rules", default="",
+                        help="comma-separated subset of rules to run")
+    parser.add_argument("--baseline", type=Path,
+                        default=core.DEFAULT_BASELINE,
+                        help="baseline file (use /dev/null to disable)")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="accept all current findings into the "
+                             "baseline file and exit 0")
+    parser.add_argument("--vmem-budget-mb", type=float, default=16.0,
+                        help="pallas-contract per-launch VMEM budget "
+                             "(MiB, default 16)")
+    parser.add_argument("--list-rules", action="store_true")
+    args = parser.parse_args(argv)
+
+    core._load_rules()
+    if args.list_rules:
+        for name in sorted(core.RULES):
+            print(f"{name:18s} {core.RULES[name][1]}")
+        return 0
+
+    rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    try:
+        result = core.run_lint(args.root, rules or None,
+                               baseline_path=args.baseline,
+                               vmem_budget_mb=args.vmem_budget_mb)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        old = core.load_baseline(args.baseline)
+        core.write_baseline(args.baseline,
+                            result.findings + result.baselined, old)
+        print(f"[lint] baseline written to {args.baseline} "
+              f"({len(result.findings) + len(result.baselined)} "
+              f"entr(y/ies))")
+        return 0
+
+    if args.json:
+        print(json.dumps(result.to_json(), indent=2))
+    else:
+        for f in result.findings:
+            print(f)
+        for e in result.stale_baseline:
+            print(f"{e['path']}: [stale-baseline] baseline entry no "
+                  f"longer matches any finding: [{e['rule']}] "
+                  f"{e['message']}")
+        print(f"[lint] {len(result.findings)} finding(s), "
+              f"{len(result.baselined)} baselined, "
+              f"{len(result.suppressed)} suppressed, "
+              f"{len(result.stale_baseline)} stale baseline entr(y/ies)")
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,117 @@
+"""Shared AST helpers: dotted-name rendering, a constant-folding
+environment over module-level assignments, and ordered statement walks."""
+from __future__ import annotations
+
+import ast
+from typing import Any, Dict, Iterator, Optional
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Render ``pl.BlockSpec``-style Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_segment(name: Optional[str]) -> Optional[str]:
+    return name.rsplit(".", 1)[-1] if name else None
+
+
+class ConstEnv:
+    """Best-effort evaluator for module-level integer/float/tuple
+    constants (``LANES = 1024``, ``BLOCK = (SUBLANES, LANES)``, ...).
+    Anything unresolvable evaluates to None."""
+
+    def __init__(self) -> None:
+        self.env: Dict[str, Any] = {}
+
+    def load_module(self, tree: ast.Module) -> None:
+        for node in tree.body:
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                val = self.eval(node.value)
+                if val is not None:
+                    self.env[node.targets[0].id] = val
+
+    def eval(self, node: ast.AST) -> Any:
+        if isinstance(node, ast.Constant) and isinstance(
+                node.value, (int, float)) and not isinstance(
+                node.value, bool):
+            return node.value
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id)
+        if isinstance(node, ast.Tuple):
+            vals = tuple(self.eval(e) for e in node.elts)
+            return None if any(v is None for v in vals) else vals
+        if isinstance(node, ast.BinOp):
+            lhs, rhs = self.eval(node.left), self.eval(node.right)
+            if lhs is None or rhs is None:
+                return None
+            try:
+                if isinstance(node.op, ast.Add):
+                    return lhs + rhs
+                if isinstance(node.op, ast.Sub):
+                    return lhs - rhs
+                if isinstance(node.op, ast.Mult):
+                    return lhs * rhs
+                if isinstance(node.op, ast.FloorDiv):
+                    return lhs // rhs
+                if isinstance(node.op, ast.Div):
+                    return lhs / rhs
+                if isinstance(node.op, ast.Pow):
+                    return lhs ** rhs
+                if isinstance(node.op, ast.LShift):
+                    return lhs << rhs
+                if isinstance(node.op, ast.Mod):
+                    return lhs % rhs
+            except (TypeError, ZeroDivisionError, ValueError):
+                return None
+            return None
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            val = self.eval(node.operand)
+            return None if val is None else -val
+        if isinstance(node, ast.Call):
+            fn = last_segment(dotted(node.func))
+            args = [self.eval(a) for a in node.args]
+            if fn in ("min", "max", "abs", "round", "int", "len") \
+                    and args and all(a is not None for a in args):
+                try:
+                    if fn == "len":
+                        return None  # len of a const tuple is rare; skip
+                    return {"min": min, "max": max, "abs": abs,
+                            "round": round, "int": int}[fn](*args)
+                except (TypeError, ValueError):
+                    return None
+        return None
+
+
+def walk_statements(body) -> Iterator[ast.stmt]:
+    """Yield statements in source order, descending into compound
+    statements but NOT into nested function/class definitions."""
+    for stmt in body:
+        yield stmt
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        for field in ("body", "orelse", "finalbody"):
+            yield from walk_statements(getattr(stmt, field, []))
+        for handler in getattr(stmt, "handlers", []):
+            yield from walk_statements(handler.body)
+
+
+def walk_own(fn: ast.AST) -> Iterator[ast.AST]:
+    """ast.walk restricted to ``fn``'s own code: does not descend into
+    nested def/class bodies (lambdas ARE descended — they trace inline)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))

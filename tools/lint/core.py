@@ -1,0 +1,227 @@
+"""Finding model, suppression comments, baseline file, and the runner.
+
+Design notes
+------------
+* Findings are keyed ``(rule, path, message)`` — deliberately *not* on the
+  line number, so the committed baseline survives unrelated edits that
+  shift lines.  Messages therefore embed the symbol they refer to rather
+  than relying on position.
+* Suppressions are per-line comments, ``# repro-lint: disable=<rule>``
+  (comma-separate to silence several rules; anything after the rule list
+  is a free-form justification).  A suppression applies to findings whose
+  anchor line is the comment's line.
+* The baseline (``tools/lint/baseline.json``) holds *accepted* findings
+  with a human justification.  Entries that no longer match any current
+  finding are STALE and fail the run — the baseline can only shrink
+  honestly.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+LINT_VERSION = 1
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,-]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str            # repo-root-relative, posix separators
+    line: int            # 1-based anchor; 0 = file-level
+    message: str
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.message)
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path,
+                "line": self.line, "message": self.message}
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class Context:
+    """Shared per-run state handed to every rule: root, config, and a
+    source/AST cache so multi-rule runs parse each file once."""
+
+    def __init__(self, root: Path, vmem_budget_mb: float = 16.0):
+        self.root = Path(root).resolve()
+        self.vmem_budget_mb = vmem_budget_mb
+        self._src: Dict[Path, Optional[str]] = {}
+        self._ast: Dict[Path, Optional[ast.Module]] = {}
+        self.parse_errors: List[Finding] = []
+
+    def rel(self, path: Path) -> str:
+        try:
+            return path.resolve().relative_to(self.root).as_posix()
+        except ValueError:
+            return path.as_posix()
+
+    def source(self, path: Path) -> Optional[str]:
+        path = Path(path)
+        if path not in self._src:
+            try:
+                self._src[path] = path.read_text(encoding="utf-8")
+            except OSError:
+                self._src[path] = None
+        return self._src[path]
+
+    def tree(self, path: Path) -> Optional[ast.Module]:
+        path = Path(path)
+        if path not in self._ast:
+            src = self.source(path)
+            if src is None:
+                self._ast[path] = None
+            else:
+                try:
+                    self._ast[path] = ast.parse(src, filename=str(path))
+                except SyntaxError as e:
+                    self._ast[path] = None
+                    self.parse_errors.append(Finding(
+                        "parse", self.rel(path), e.lineno or 0,
+                        f"syntax error: {e.msg}"))
+        return self._ast[path]
+
+    def suppressions(self, path: Path) -> Dict[int, set]:
+        """line -> set of rule names disabled on that line."""
+        src = self.source(path)
+        out: Dict[int, set] = {}
+        if src is None:
+            return out
+        for i, text in enumerate(src.splitlines(), start=1):
+            m = SUPPRESS_RE.search(text)
+            if m:
+                out[i] = {r.strip() for r in m.group(1).split(",")
+                          if r.strip()}
+        return out
+
+
+# --------------------------------------------------------------------------
+# Rule registry
+# --------------------------------------------------------------------------
+
+RULES: Dict[str, Tuple[Callable[[Context], List[Finding]], str]] = {}
+
+
+def rule(name: str, doc: str):
+    def deco(fn):
+        RULES[name] = (fn, doc)
+        return fn
+    return deco
+
+
+def _load_rules() -> None:
+    # import for side effect: each module registers itself via @rule
+    from tools.lint.rules import (bits_accounting, jit_hazard,  # noqa: F401
+                                  pallas_contract, ref_parity)
+
+
+# --------------------------------------------------------------------------
+# Baseline
+# --------------------------------------------------------------------------
+
+
+def load_baseline(path: Path) -> List[dict]:
+    if not Path(path).exists():
+        return []
+    data = json.loads(Path(path).read_text(encoding="utf-8"))
+    entries = data.get("findings", [])
+    for e in entries:
+        for field in ("rule", "path", "message"):
+            if field not in e:
+                raise ValueError(
+                    f"baseline entry missing {field!r}: {e}")
+    return entries
+
+
+def write_baseline(path: Path, findings: Iterable[Finding],
+                   old_entries: Iterable[dict] = ()) -> None:
+    keep_just = {(e["rule"], e["path"], e["message"]):
+                 e.get("justification", "") for e in old_entries}
+    entries = [{"rule": f.rule, "path": f.path, "message": f.message,
+                "justification": keep_just.get(
+                    f.key, "TODO: justify or fix")}
+               for f in sorted(set(findings),
+                               key=lambda f: (f.path, f.rule, f.message))]
+    payload = {"lint_version": LINT_VERSION, "findings": entries}
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n",
+                          encoding="utf-8")
+
+
+# --------------------------------------------------------------------------
+# Runner
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]          # actionable (fail the run)
+    baselined: List[Finding]         # matched a baseline entry
+    suppressed: List[Finding]        # silenced by an inline comment
+    stale_baseline: List[dict]       # baseline entries nothing matched
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.stale_baseline
+
+    def to_json(self) -> dict:
+        return {
+            "lint_version": LINT_VERSION,
+            "ok": self.ok,
+            "findings": [f.to_json() for f in self.findings],
+            "baselined": [f.to_json() for f in self.baselined],
+            "suppressed": [f.to_json() for f in self.suppressed],
+            "stale_baseline": list(self.stale_baseline),
+        }
+
+
+def run_lint(root: Path, rules: Optional[Iterable[str]] = None,
+             baseline_path: Optional[Path] = DEFAULT_BASELINE,
+             vmem_budget_mb: float = 16.0) -> LintResult:
+    """Run the selected rules rooted at ``root`` and triage the findings
+    into actionable / suppressed / baselined buckets."""
+    _load_rules()
+    names = list(rules) if rules else sorted(RULES)
+    unknown = [n for n in names if n not in RULES]
+    if unknown:
+        raise KeyError(f"unknown rule(s): {', '.join(unknown)}; "
+                       f"available: {', '.join(sorted(RULES))}")
+
+    ctx = Context(root, vmem_budget_mb=vmem_budget_mb)
+    raw: List[Finding] = []
+    for name in names:
+        fn, _ = RULES[name]
+        raw.extend(fn(ctx))
+    raw.extend(ctx.parse_errors)
+    raw = sorted(set(raw), key=lambda f: (f.path, f.line, f.rule, f.message))
+
+    suppressed, live = [], []
+    supp_cache: Dict[str, Dict[int, set]] = {}
+    for f in raw:
+        if f.path not in supp_cache:
+            supp_cache[f.path] = ctx.suppressions(ctx.root / f.path)
+        disabled = supp_cache[f.path].get(f.line, set())
+        (suppressed if f.rule in disabled else live).append(f)
+
+    entries = load_baseline(baseline_path) if baseline_path else []
+    base_keys = {(e["rule"], e["path"], e["message"]) for e in entries}
+    matched_keys = set()
+    findings, baselined = [], []
+    for f in live:
+        if f.key in base_keys:
+            baselined.append(f)
+            matched_keys.add(f.key)
+        else:
+            findings.append(f)
+    stale = [e for e in entries
+             if (e["rule"], e["path"], e["message"]) not in matched_keys]
+    return LintResult(findings=findings, baselined=baselined,
+                      suppressed=suppressed, stale_baseline=stale)

@@ -1,0 +1,211 @@
+"""bits-accounting: registry / bits_per_client / docs-table drift.
+
+The round's ``uplink_bits`` metric is produced by the active compressor's
+``bits_per_client`` (core/fed.py), and ``docs/compressors.md`` carries
+the per-scheme bit-formula table — three surfaces that historically
+drift.  This rule parses ``src/repro/core/compressors/*.py`` (never
+imports it) and checks:
+
+* every ``register("<name>")`` call resolves to at least one concrete
+  compressor class that defines — or inherits from a collected base —
+  a *real* ``bits_per_client`` (a body that only ``raise``s, like the
+  ``Compressor`` protocol stub, does not count);
+* every public class deriving (transitively) from ``Compressor``
+  defines or inherits a real ``bits_per_client``;
+* the "Built-in algorithms" table in ``docs/compressors.md`` names
+  exactly the set of registered algorithms — a registered name missing
+  from the table, or a table row for an unregistered name, is an error.
+
+Registration is recognized both as a decorator (``@register("x")``) and
+as a direct call (``register("x")(factory(...))``); the factory body is
+walked for class instantiations to bind name -> class.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.lint.astutil import dotted, last_segment
+from tools.lint.core import Context, Finding, rule
+
+DOCS = "docs/compressors.md"
+TABLE_HEADING = "built-in algorithms"
+NAME_RE = re.compile(r"^[a-z0-9_]+$")
+
+
+class _Class:
+    def __init__(self, node: ast.ClassDef, rel: str):
+        self.node = node
+        self.rel = rel
+        self.bases = [last_segment(dotted(b)) for b in node.bases]
+        self.methods = {n.name: n for n in node.body
+                        if isinstance(n, ast.FunctionDef)}
+
+
+def _pure_raise(fn: ast.FunctionDef) -> bool:
+    body = fn.body
+    if body and isinstance(body[0], ast.Expr) \
+            and isinstance(body[0].value, ast.Constant) \
+            and isinstance(body[0].value.value, str):
+        body = body[1:]
+    return len(body) == 1 and isinstance(body[0], ast.Raise)
+
+
+def _defines_real_bits(name: str, classes: Dict[str, _Class],
+                       seen: Optional[Set[str]] = None) -> bool:
+    seen = seen or set()
+    if name in seen or name not in classes:
+        return False
+    seen.add(name)
+    cls = classes[name]
+    fn = cls.methods.get("bits_per_client")
+    if fn is not None:
+        return not _pure_raise(fn)
+    return any(_defines_real_bits(b, classes, seen)
+               for b in cls.bases if b)
+
+
+def _derives_from_compressor(name: str, classes: Dict[str, _Class],
+                             seen: Optional[Set[str]] = None) -> bool:
+    seen = seen or set()
+    if name in seen or name not in classes:
+        return False
+    seen.add(name)
+    for b in classes[name].bases:
+        if b == "Compressor" or (b and _derives_from_compressor(
+                b, classes, seen)):
+            return True
+    return False
+
+
+def _instantiated_classes(node: ast.AST,
+                          classes: Dict[str, _Class]) -> Set[str]:
+    out = set()
+    for call in ast.walk(node):
+        if isinstance(call, ast.Call):
+            name = last_segment(dotted(call.func))
+            if name in classes:
+                out.add(name)
+    return out
+
+
+def _doc_table(ctx: Context) -> List[Tuple[str, int]]:
+    """(algorithm name, line) for each row of the built-in table."""
+    src = ctx.source(ctx.root / DOCS)
+    rows: List[Tuple[str, int]] = []
+    if src is None:
+        return rows
+    in_section = False
+    for i, line in enumerate(src.splitlines(), start=1):
+        if line.startswith("#"):
+            in_section = TABLE_HEADING in line.lower()
+            continue
+        if not in_section or not line.lstrip().startswith("|"):
+            continue
+        first = line.split("|")[1].strip().strip("`")
+        if NAME_RE.match(first):
+            rows.append((first, i))
+    return rows
+
+
+@rule("bits-accounting",
+      "registered compressors define bits_per_client and the "
+      "docs/compressors.md table names exactly the registry")
+def check(ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    pkg = ctx.root / "src" / "repro" / "core" / "compressors"
+    if not pkg.is_dir():
+        return findings
+
+    classes: Dict[str, _Class] = {}
+    factories: Dict[str, ast.FunctionDef] = {}
+    registered: Dict[str, Tuple[str, int, Optional[ast.AST]]] = {}
+
+    trees = {}
+    for path in sorted(pkg.glob("*.py")):
+        tree = ctx.tree(path)
+        if tree is None:
+            continue
+        trees[path] = tree
+        rel = ctx.rel(Path(path))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                classes[node.name] = _Class(node, rel)
+            elif isinstance(node, ast.FunctionDef):
+                factories.setdefault(node.name, node)
+
+    for path, tree in trees.items():
+        rel = ctx.rel(Path(path))
+        # decorator form: @register("x") on a factory def
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.ClassDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) \
+                            and last_segment(dotted(dec.func)) \
+                            == "register" and dec.args \
+                            and isinstance(dec.args[0], ast.Constant) \
+                            and isinstance(dec.args[0].value, str):
+                        registered[dec.args[0].value] = (
+                            rel, dec.lineno, node)
+            # call form: register("x")(factory_expr)
+            if isinstance(node, ast.Call) and isinstance(
+                    node.func, ast.Call) \
+                    and last_segment(dotted(node.func.func)) \
+                    == "register" \
+                    and node.func.args \
+                    and isinstance(node.func.args[0], ast.Constant) \
+                    and isinstance(node.func.args[0].value, str):
+                target: Optional[ast.AST] = None
+                if node.args:
+                    arg = node.args[0]
+                    if isinstance(arg, ast.Name):
+                        target = factories.get(arg.id)
+                    elif isinstance(arg, ast.Call):
+                        fac = last_segment(dotted(arg.func))
+                        target = factories.get(fac, arg)
+                registered[node.func.args[0].value] = (
+                    rel, node.lineno, target)
+
+    # (1) every registration resolves to a class with real bits_per_client
+    for name, (rel, line, target) in sorted(registered.items()):
+        if target is None:
+            continue
+        insts = _instantiated_classes(target, classes)
+        if insts and not any(_defines_real_bits(c, classes)
+                             for c in insts):
+            findings.append(Finding(
+                "bits-accounting", rel, line,
+                f"registered compressor `{name}` resolves to "
+                f"{sorted(insts)} which define(s) no real "
+                f"bits_per_client"))
+
+    # (2) every public Compressor subclass has a real bits_per_client
+    for cname, cls in sorted(classes.items()):
+        if cname.startswith("_") or cname == "Compressor":
+            continue
+        if _derives_from_compressor(cname, classes) \
+                and not _defines_real_bits(cname, classes):
+            findings.append(Finding(
+                "bits-accounting", cls.rel, cls.node.lineno,
+                f"compressor class `{cname}` neither defines nor "
+                f"inherits a real bits_per_client"))
+
+    # (3) docs table <-> registry set equality
+    rows = _doc_table(ctx)
+    doc_names = {n for n, _ in rows}
+    if registered:
+        for name, (rel, line, _) in sorted(registered.items()):
+            if name not in doc_names:
+                findings.append(Finding(
+                    "bits-accounting", rel, line,
+                    f"registered compressor `{name}` is missing from "
+                    f"the {DOCS} built-in algorithms table"))
+        for name, line in rows:
+            if name not in registered:
+                findings.append(Finding(
+                    "bits-accounting", DOCS, line,
+                    f"docs table row `{name}` names no registered "
+                    f"compressor (doc-code drift)"))
+    return findings

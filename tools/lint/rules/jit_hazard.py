@@ -1,0 +1,290 @@
+"""jit-hazard: host-sync and recompile triggers inside traced code.
+
+Builds a per-module call graph over the hot-path modules (``core/fed.py``,
+``core/aggregate.py``, ``core/sparsify.py``, ``core/masks.py``,
+``launch/steps.py``, ``core/compressors/*.py``), marks the traced roots,
+and inside every function reachable from a root flags:
+
+* ``int()`` / ``float()`` / ``bool()`` whose argument is not provably
+  host-static (a traced operand concretizes -> TracerError, or silently
+  device-syncs under jit disable);
+* ``.item()`` / ``.tolist()`` (always a device sync);
+* ``np.asarray`` / ``np.array`` on traced values (host transfer;
+  ``jnp.asarray`` is fine and not flagged);
+* Python ``if``/``while`` whose test numerically compares a function
+  parameter that is not host-static (data-dependent control flow ->
+  recompile per value or TracerBoolConversionError).
+
+Traced roots per module: functions passed by name to
+``jit``/``shard_map``/``scan``/``vmap``/... sites, jit-decorated
+functions, and — mode-dependent — either every def nested directly in a
+``make_*``/``build_*`` builder (fed.py, steps.py: the builders themselves
+run at trace-build time and must NOT be flagged) or every module-level
+def plus ``compress``/``decompress`` methods (aggregate, sparsify, masks,
+compressors: the whole module body is round-function territory).
+
+"Host-static" is a syntactic under-approximation: literals, ALL_CAPS
+module constants, ``.shape``/``.size``/``.ndim``/``.dtype`` chains (and
+subscripts of them), calls to a small whitelist of pure host functions
+(``len``/``min``/``max``/``round``/``k_for``/``math.*``...) with static
+arguments, and locals assigned from static expressions.  Anything else —
+parameters included — is assumed traced.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Set
+
+from tools.lint.astutil import (dotted, last_segment, walk_own,
+                                walk_statements)
+from tools.lint.core import Context, Finding, rule
+
+#: (relative path glob, root mode) — "builders" or "all_public"
+SCAN_TARGETS = (
+    ("src/repro/core/fed.py", "builders"),
+    ("src/repro/launch/steps.py", "builders"),
+    ("src/repro/core/aggregate.py", "all_public"),
+    ("src/repro/core/sparsify.py", "all_public"),
+    ("src/repro/core/masks.py", "all_public"),
+    ("src/repro/core/compressors/*.py", "all_public"),
+)
+
+TRACE_CALLS = {"jit", "shard_map", "scan", "vmap", "pmap", "fori_loop",
+               "while_loop", "cond", "checkpoint", "remat"}
+TRACED_METHODS = {"compress", "decompress", "bits_per_client"}
+HOST_CASTS = {"int", "float", "bool"}
+SYNC_METHODS = {"item", "tolist"}
+NUMPY_HOST = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+STATIC_CALLS = {"len", "min", "max", "abs", "round", "int", "float",
+                "sum", "prod", "ceil", "floor", "k_for", "pow",
+                "overselect_bound"}
+SHAPE_ATTRS = {"shape", "size", "ndim", "dtype", "itemsize"}
+
+
+def _truncate(code: str, limit: int = 60) -> str:
+    code = " ".join(code.split())
+    return code if len(code) <= limit else code[:limit - 3] + "..."
+
+
+class _Fn:
+    def __init__(self, node: ast.FunctionDef, parent):
+        self.node = node
+        self.parent = parent          # _Fn, ast.ClassDef, or None (module)
+        self.params = {a.arg for a in (node.args.args
+                                       + node.args.posonlyargs
+                                       + node.args.kwonlyargs)}
+
+
+def _collect_fns(tree: ast.Module) -> List[_Fn]:
+    out: List[_Fn] = []
+
+    def visit(node, parent):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.FunctionDef):
+                fn = _Fn(child, parent)
+                out.append(fn)
+                visit(child, fn)
+            elif isinstance(child, ast.ClassDef):
+                visit(child, child)
+            else:
+                visit(child, parent)
+
+    visit(tree, None)
+    return out
+
+
+def _static_locals(fn: ast.FunctionDef) -> Set[str]:
+    """Names assigned (in source order) from host-static expressions."""
+    static: Set[str] = set()
+    for stmt in walk_statements(fn.body):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            if _is_static(stmt.value, static):
+                static.add(stmt.targets[0].id)
+            else:
+                static.discard(stmt.targets[0].id)
+    return static
+
+
+def _is_static(node: ast.AST, static: Set[str]) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in static or node.id.isupper()
+    if isinstance(node, ast.Attribute):
+        if node.attr in SHAPE_ATTRS or node.attr.isupper():
+            return True
+        # self.<...> chains: instance config fields (dataclass hypers),
+        # never traced arrays in this codebase's compressor protocol
+        base = node.value
+        while isinstance(base, ast.Attribute):
+            base = base.value
+        return isinstance(base, ast.Name) and base.id == "self"
+    if isinstance(node, ast.Subscript):
+        return _is_static(node.value, static)
+    if isinstance(node, ast.Call):
+        name = last_segment(dotted(node.func))
+        return (name in STATIC_CALLS
+                and all(_is_static(a, static) for a in node.args)
+                and not node.keywords)
+    if isinstance(node, (ast.BinOp,)):
+        return _is_static(node.left, static) and \
+            _is_static(node.right, static)
+    if isinstance(node, ast.UnaryOp):
+        return _is_static(node.operand, static)
+    if isinstance(node, ast.Compare):
+        return _is_static(node.left, static) and \
+            all(_is_static(c, static) for c in node.comparators)
+    if isinstance(node, ast.BoolOp):
+        return all(_is_static(v, static) for v in node.values)
+    if isinstance(node, ast.IfExp):
+        return all(_is_static(n, static)
+                   for n in (node.test, node.body, node.orelse))
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_static(e, static) for e in node.elts)
+    if isinstance(node, (ast.GeneratorExp, ast.ListComp)):
+        return _is_static(node.elt, static)
+    return False
+
+
+def _roots(fns: List[_Fn], mode: str) -> Set[ast.FunctionDef]:
+    by_name: Dict[str, List[_Fn]] = {}
+    for f in fns:
+        by_name.setdefault(f.node.name, []).append(f)
+    roots: Set[ast.FunctionDef] = set()
+
+    for f in fns:
+        node = f.node
+        # jit-decorated (plain or functools.partial(jax.jit, ...))
+        for dec in node.decorator_list:
+            d = dotted(dec.func if isinstance(dec, ast.Call) else dec)
+            if d and last_segment(d) in ("jit",):
+                roots.add(node)
+            if isinstance(dec, ast.Call) and last_segment(d) == "partial" \
+                    and dec.args and last_segment(
+                        dotted(dec.args[0])) == "jit":
+                roots.add(node)
+        # builders mode: defs nested directly inside make_*/build_*
+        if mode == "builders" and isinstance(f.parent, _Fn) \
+                and f.parent.parent is None \
+                and f.parent.node.name.startswith(("make_", "build_")):
+            roots.add(node)
+        if mode == "all_public":
+            if f.parent is None and not node.name.startswith("__"):
+                roots.add(node)
+            if isinstance(f.parent, ast.ClassDef) \
+                    and node.name in TRACED_METHODS:
+                roots.add(node)
+
+    # functions handed by name to tracing transforms anywhere
+    for f in fns:
+        for call in walk_own(f.node):
+            if not isinstance(call, ast.Call):
+                continue
+            if last_segment(dotted(call.func)) not in TRACE_CALLS:
+                continue
+            for arg in call.args[:2]:
+                if isinstance(arg, ast.Name) and arg.id in by_name:
+                    for cand in by_name[arg.id]:
+                        roots.add(cand.node)
+    return roots
+
+
+def _reachable(fns: List[_Fn],
+               roots: Set[ast.FunctionDef]) -> List[_Fn]:
+    by_name: Dict[str, List[_Fn]] = {}
+    by_node = {f.node: f for f in fns}
+    for f in fns:
+        by_name.setdefault(f.node.name, []).append(f)
+    seen: Set[ast.FunctionDef] = set()
+    stack = [by_node[r] for r in roots if r in by_node]
+    while stack:
+        f = stack.pop()
+        if f.node in seen:
+            continue
+        seen.add(f.node)
+        for call in walk_own(f.node):
+            if not isinstance(call, ast.Call):
+                continue
+            callee = None
+            if isinstance(call.func, ast.Name):
+                callee = call.func.id
+            elif isinstance(call.func, ast.Attribute) and isinstance(
+                    call.func.value, ast.Name) \
+                    and call.func.value.id == "self":
+                callee = call.func.attr
+            if callee and callee in by_name:
+                stack.extend(by_name[callee])
+    return [f for f in fns if f.node in seen]
+
+
+def _check_fn(rel: str, f: _Fn, findings: List[Finding]) -> None:
+    static = _static_locals(f.node)
+    for node in walk_own(f.node):
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            name = last_segment(d)
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in SYNC_METHODS and not node.args:
+                findings.append(Finding(
+                    "jit-hazard", rel, node.lineno,
+                    f"{f.node.name}: `.{node.func.attr}()` is a host "
+                    f"sync inside traced code"))
+            elif d in NUMPY_HOST:
+                findings.append(Finding(
+                    "jit-hazard", rel, node.lineno,
+                    f"{f.node.name}: `{d}(...)` transfers a traced value "
+                    f"to host (use jnp.*)"))
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in HOST_CASTS and node.args \
+                    and not all(_is_static(a, static) for a in node.args):
+                snippet = _truncate(ast.unparse(node))
+                findings.append(Finding(
+                    "jit-hazard", rel, node.lineno,
+                    f"{f.node.name}: host cast `{snippet}` on a value "
+                    f"that is not provably static concretizes the "
+                    f"tracer"))
+        elif isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            if not isinstance(test, ast.Compare):
+                continue
+            ops_ok = all(isinstance(o, (ast.Lt, ast.LtE, ast.Gt, ast.GtE,
+                                        ast.Eq, ast.NotEq))
+                         for o in test.ops)
+            comparators = [test.left] + list(test.comparators)
+            if any(isinstance(c, ast.Constant)
+                   and isinstance(c.value, (str, type(None)))
+                   for c in comparators):
+                continue
+            names = {n.id for n in ast.walk(test)
+                     if isinstance(n, ast.Name)}
+            if ops_ok and names & f.params \
+                    and not _is_static(test, static):
+                snippet = _truncate(ast.unparse(test))
+                kind = "if" if isinstance(node, ast.If) else "while"
+                findings.append(Finding(
+                    "jit-hazard", rel, node.lineno,
+                    f"{f.node.name}: Python `{kind} {snippet}:` on a "
+                    f"parameter that is not provably static is a "
+                    f"recompile/concretization hazard"))
+
+
+@rule("jit-hazard",
+      "host-sync and recompile triggers inside functions reachable from "
+      "jit/shard_map roots in the hot-path modules")
+def check(ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    for pattern, mode in SCAN_TARGETS:
+        base = ctx.root
+        paths = sorted(base.glob(pattern))
+        for path in paths:
+            tree = ctx.tree(path)
+            if tree is None:
+                continue
+            rel = ctx.rel(Path(path))
+            fns = _collect_fns(tree)
+            roots = _roots(fns, mode)
+            for f in _reachable(fns, roots):
+                _check_fn(rel, f, findings)
+    return findings

@@ -1,0 +1,214 @@
+"""pallas-contract: BlockSpec tile alignment + per-launch VMEM budget.
+
+Walks every ``pl.pallas_call`` site under ``src/repro/kernels/``,
+resolves the block shapes of its in/out BlockSpecs (module constants like
+``BLOCK = (SUBLANES, LANES)`` are folded; locally-bound ``spec = pl.
+BlockSpec(...)`` names are chased within the enclosing function), and:
+
+* flags any resolved block shape whose last two dims are not multiples of
+  the float32 TPU tile ``(8, 128)`` (Mosaic pads misaligned tiles, which
+  wastes VMEM and VPU lanes at best and fails to lower at worst);
+* sums ``prod(block) * dtype_bytes`` over all specs — doubled for Pallas'
+  double buffering — and flags launches whose estimate exceeds the VMEM
+  budget (``--vmem-budget-mb``, default 16).
+
+Unresolvable spec *counts* (``in_specs=[spec] * len(ins)``) fall back to
+a documented fan-out of ``UNKNOWN_FANOUT`` specs so the estimate stays
+conservative; unresolvable shapes are skipped (e.g. memory-space-only
+specs).  Input dtypes are not statically known, so inputs are costed at
+4 bytes (f32); output dtypes are read off the ``out_shape``
+ShapeDtypeStructs when present.
+"""
+from __future__ import annotations
+
+import ast
+import math
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+from tools.lint.astutil import ConstEnv, dotted, last_segment, walk_own
+from tools.lint.core import Context, Finding, rule
+
+TILE = (8, 128)              # f32 min tile (sublanes, lanes)
+UNKNOWN_FANOUT = 8           # spec count assumed for [spec] * len(xs)
+DTYPE_BYTES = {
+    "float64": 8, "int64": 8, "uint64": 8,
+    "float32": 4, "int32": 4, "uint32": 4, "f32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2, "bf16": 2,
+    "int8": 1, "uint8": 1, "bool": 1, "bool_": 1,
+}
+
+
+class _Spec:
+    """One resolved BlockSpec: its block shape (or None) and the source
+    line of the ``pl.BlockSpec(...)`` call for anchoring findings."""
+
+    def __init__(self, shape: Optional[Tuple[int, ...]], line: int):
+        self.shape = shape
+        self.line = line
+
+
+def _is_blockspec_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and last_segment(dotted(node.func)) == "BlockSpec")
+
+
+def _spec_from_call(call: ast.Call, consts: ConstEnv) -> _Spec:
+    shape_node = None
+    if call.args:
+        shape_node = call.args[0]
+    for kw in call.keywords:
+        if kw.arg == "block_shape":
+            shape_node = kw.value
+    shape = consts.eval(shape_node) if shape_node is not None else None
+    if isinstance(shape, (int, float)):
+        shape = (int(shape),)
+    if isinstance(shape, tuple) and all(
+            isinstance(s, int) and s > 0 for s in shape):
+        return _Spec(tuple(int(s) for s in shape), call.lineno)
+    return _Spec(None, call.lineno)
+
+
+def _resolve_specs(node: ast.AST, consts: ConstEnv,
+                   local_specs: dict) -> Tuple[List[_Spec], bool]:
+    """-> (specs, count_known).  Handles inline BlockSpec calls, names
+    bound to BlockSpecs, [E]*n / tuple([E]*n) replication, and (nested)
+    list/tuple literals."""
+    if _is_blockspec_call(node):
+        return [_spec_from_call(node, consts)], True
+    if isinstance(node, ast.Name) and node.id in local_specs:
+        return [local_specs[node.id]], True
+    if isinstance(node, (ast.List, ast.Tuple)):
+        specs, known = [], True
+        for elt in node.elts:
+            sub, sub_known = _resolve_specs(elt, consts, local_specs)
+            specs.extend(sub)
+            known = known and sub_known
+        return specs, known
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+        seq = node.left if isinstance(node.left, (ast.List, ast.Tuple)) \
+            else node.right
+        count_node = node.right if seq is node.left else node.left
+        if isinstance(seq, (ast.List, ast.Tuple)):
+            base, _ = _resolve_specs(seq, consts, local_specs)
+            count = consts.eval(count_node)
+            if isinstance(count, int) and count >= 0:
+                return base * count, True
+            return base * UNKNOWN_FANOUT, False
+    if isinstance(node, ast.Call) \
+            and last_segment(dotted(node.func)) in ("tuple", "list") \
+            and len(node.args) == 1:
+        return _resolve_specs(node.args[0], consts, local_specs)
+    return [], True
+
+
+def _out_dtypes(node: Optional[ast.AST]) -> List[Optional[int]]:
+    """Bytes-per-element for each ShapeDtypeStruct in out_shape, where
+    statically readable."""
+    if node is None:
+        return []
+    if isinstance(node, (ast.List, ast.Tuple)):
+        out = []
+        for elt in node.elts:
+            out.extend(_out_dtypes(elt))
+        return out
+    if isinstance(node, ast.Call):
+        name = last_segment(dotted(node.func))
+        if name == "ShapeDtypeStruct":
+            dt = None
+            if len(node.args) >= 2:
+                dt = DTYPE_BYTES.get(
+                    last_segment(dotted(node.args[1])) or "")
+            return [dt]
+    return [None]
+
+
+def _misaligned(shape: Tuple[int, ...]) -> bool:
+    if len(shape) >= 2:
+        return shape[-1] % TILE[1] != 0 or shape[-2] % TILE[0] != 0
+    return shape[-1] % TILE[1] != 0
+
+
+def _check_call(ctx: Context, rel: str, fn: ast.FunctionDef,
+                call: ast.Call, consts: ConstEnv, local_specs: dict,
+                findings: List[Finding]) -> None:
+    kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+    in_node = kwargs.get("in_specs")
+    out_node = kwargs.get("out_specs")
+    grid_spec = kwargs.get("grid_spec")
+    if grid_spec is not None and isinstance(grid_spec, ast.Call):
+        gkw = {kw.arg: kw.value for kw in grid_spec.keywords if kw.arg}
+        in_node = in_node or gkw.get("in_specs")
+        out_node = out_node or gkw.get("out_specs")
+
+    groups = []
+    approx = False
+    for role, node in (("in_specs", in_node), ("out_specs", out_node)):
+        if node is None:
+            continue
+        specs, known = _resolve_specs(node, consts, local_specs)
+        approx = approx or not known
+        groups.append((role, specs))
+
+    out_bytes = _out_dtypes(kwargs.get("out_shape"))
+
+    seen_lines = set()
+    total = 0
+    for role, specs in groups:
+        for idx, spec in enumerate(specs):
+            if spec.shape is None:
+                continue
+            if _misaligned(spec.shape) and spec.line not in seen_lines:
+                seen_lines.add(spec.line)
+                findings.append(Finding(
+                    "pallas-contract", rel, spec.line,
+                    f"{fn.name}: {role} block shape {spec.shape} is not "
+                    f"aligned to the f32 TPU tile {TILE}"))
+            bpe = 4
+            if role == "out_specs" and idx < len(out_bytes) \
+                    and out_bytes[idx]:
+                bpe = out_bytes[idx]
+            total += math.prod(spec.shape) * bpe
+    total *= 2  # Pallas double-buffers HBM<->VMEM streams
+    budget = int(ctx.vmem_budget_mb * 1024 * 1024)
+    if total > budget:
+        qual = "approx. " if approx else ""
+        findings.append(Finding(
+            "pallas-contract", rel, call.lineno,
+            f"{fn.name}: {qual}per-launch VMEM estimate "
+            f"{total // 1024} KiB exceeds the {ctx.vmem_budget_mb:g} MiB "
+            f"budget"))
+
+
+@rule("pallas-contract",
+      "BlockSpec tile alignment and per-launch VMEM budget at every "
+      "pl.pallas_call site under src/repro/kernels/")
+def check(ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    kdir = ctx.root / "src" / "repro" / "kernels"
+    if not kdir.is_dir():
+        return findings
+    for path in sorted(kdir.rglob("*.py")):
+        tree = ctx.tree(path)
+        if tree is None:
+            continue
+        consts = ConstEnv()
+        consts.load_module(tree)
+        rel = ctx.rel(Path(path))
+        for fn in [n for n in ast.walk(tree)
+                   if isinstance(n, ast.FunctionDef)]:
+            local_specs = {}
+            for node in walk_own(fn):
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and _is_blockspec_call(node.value)):
+                    local_specs[node.targets[0].id] = _spec_from_call(
+                        node.value, consts)
+            for node in walk_own(fn):
+                if (isinstance(node, ast.Call)
+                        and last_segment(dotted(node.func))
+                        == "pallas_call"):
+                    _check_call(ctx, rel, fn, node, consts, local_specs,
+                                findings)
+    return findings

@@ -1,0 +1,94 @@
+"""ref-parity: every public kernel op needs an oracle and a parity test.
+
+For each kernel family ``src/repro/kernels/<fam>/`` with an ``ops.py``:
+
+* every public top-level def in ``ops.py`` that touches jax/jnp (the
+  "ops") must have a same-named reference in the sibling ``ref.py`` —
+  ``<op>_ref``, with a trailing ``_kernel`` suffix stripped first
+  (``select_tau_kernel`` pairs with ``select_tau_ref``);
+* the op must be *referenced from test code* in ``tests/test_kernels.py``
+  or ``tests/test_sparsify_dispatch.py``.  References are collected from
+  the test ASTs (every Name and attribute access), so a mention in a
+  docstring does not count — only code that can actually exercise the op.
+
+Pure-Python helpers in ops.py (no jax/jnp in the body) are exempt: they
+are contracts' constants, not kernels.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Set
+
+from tools.lint.core import Context, Finding, rule
+
+TEST_FILES = ("tests/test_kernels.py", "tests/test_sparsify_dispatch.py")
+
+
+def _code_identifiers(ctx: Context, paths) -> Set[str]:
+    ids: Set[str] = set()
+    for rel in paths:
+        tree = ctx.tree(ctx.root / rel)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Name):
+                ids.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                ids.add(node.attr)
+    return ids
+
+
+def _uses_jax(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and node.id in ("jax", "jnp"):
+            return True
+    return False
+
+
+@rule("ref-parity",
+      "every public kernels/*/ops.py op has a same-named ref.py oracle "
+      "and a test that references it")
+def check(ctx: Context) -> List[Finding]:
+    findings: List[Finding] = []
+    kdir = ctx.root / "src" / "repro" / "kernels"
+    if not kdir.is_dir():
+        return findings
+    test_ids = _code_identifiers(ctx, TEST_FILES)
+    for fam in sorted(p for p in kdir.iterdir() if p.is_dir()):
+        ops_path = fam / "ops.py"
+        if not ops_path.exists():
+            continue
+        ops_tree = ctx.tree(ops_path)
+        if ops_tree is None:
+            continue
+        rel_ops = ctx.rel(ops_path)
+        ref_path = fam / "ref.py"
+        ref_tree = ctx.tree(ref_path) if ref_path.exists() else None
+        if ref_tree is None:
+            findings.append(Finding(
+                "ref-parity", rel_ops, 0,
+                f"kernel family {fam.name!r} has ops.py but no ref.py "
+                f"oracle module"))
+        ref_names = {n.name for n in (ref_tree.body if ref_tree else [])
+                     if isinstance(n, ast.FunctionDef)}
+        for node in ops_tree.body:
+            if not isinstance(node, ast.FunctionDef) \
+                    or node.name.startswith("_") or not _uses_jax(node):
+                continue
+            base = node.name
+            if base.endswith("_kernel"):
+                base = base[: -len("_kernel")]
+            want = base + "_ref"
+            if ref_tree is not None and want not in ref_names \
+                    and node.name + "_ref" not in ref_names:
+                findings.append(Finding(
+                    "ref-parity", rel_ops, node.lineno,
+                    f"op `{node.name}` has no `{want}` oracle in "
+                    f"{fam.name}/ref.py"))
+            if node.name not in test_ids:
+                findings.append(Finding(
+                    "ref-parity", rel_ops, node.lineno,
+                    f"op `{node.name}` is not referenced by any parity "
+                    f"test in {' or '.join(TEST_FILES)}"))
+    return findings
