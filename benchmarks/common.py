@@ -37,7 +37,11 @@ ROW_OPTIONAL = {"dtype": str, "note": str,
                 "bytes_moved": (int, float), "gb_per_s": (int, float),
                 "k": int, "achieved_k": int,
                 "overselect_frac": (int, float),
-                "speedup_vs_reference": (int, float)}
+                "speedup_vs_reference": (int, float),
+                # launch accounting of the packed cohort pipeline
+                # (docs/kernels.md §4): Pallas launches per call and
+                # pytree leaves covered by them
+                "launches": int, "leaves": int}
 
 
 def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]):
@@ -124,13 +128,34 @@ def validate_bench(doc) -> List[str]:
 
 
 def main(argv: Sequence[str]) -> int:
-    """CLI validator: ``python -m benchmarks.common BENCH_*.json``."""
+    """CLI validator: ``python -m benchmarks.common BENCH_*.json
+    [--require name1,name2]``.
+
+    ``--require`` fails validation unless every named row appears in the
+    union of the validated documents' rows — CI uses it to pin the
+    packed-pipeline rows so a refactor can't silently drop them."""
     if not argv:
-        print("usage: python -m benchmarks.common BENCH_file.json ...",
-              file=sys.stderr)
+        print("usage: python -m benchmarks.common BENCH_file.json ... "
+              "[--require name1,name2]", file=sys.stderr)
+        return 2
+    required: List[str] = []
+    files: List[str] = []
+    it = iter(argv)
+    for arg in it:
+        if arg == "--require":
+            val = next(it, "")
+            required += [s for s in val.split(",") if s]
+        elif arg.startswith("--require="):
+            required += [s for s in arg.split("=", 1)[1].split(",") if s]
+        else:
+            files.append(arg)
+    if not files:
+        print("usage: python -m benchmarks.common BENCH_file.json ... "
+              "[--require name1,name2]", file=sys.stderr)
         return 2
     bad = 0
-    for arg in argv:
+    seen_names = set()
+    for arg in files:
         path = Path(arg)
         try:
             doc = json.loads(path.read_text())
@@ -145,8 +170,17 @@ def main(argv: Sequence[str]) -> int:
         bad += bool(errors)
         rows = doc.get("rows") if isinstance(doc, dict) else None
         n_rows = len(rows) if isinstance(rows, list) else 0
+        if isinstance(rows, list):
+            seen_names |= {r.get("name") for r in rows
+                           if isinstance(r, dict)}
         print(f"[bench-schema] {path}: "
               f"{'INVALID' if errors else 'ok'} ({n_rows} rows)")
+    missing = [name for name in required if name not in seen_names]
+    for name in missing:
+        print(f"[bench-schema] required row {name!r} missing from "
+              f"{', '.join(files)}", file=sys.stderr)
+    if missing:
+        bad += 1
     return 1 if bad else 0
 
 

@@ -18,9 +18,10 @@ shapes):
   off-TPU this row measures the same arithmetic through XLA; on TPU it
   runs the real kernels.
 
-``bytes_moved`` is the analytic HBM-traffic model of each variant
-(docs/benchmarks.md §bytes); ``achieved_k`` counts the actually-kept
-support of the emitted payload.
+``bytes_moved`` is the analytic HBM-traffic model of each variant,
+imported from ``repro.roofline`` (single source shared with the roofline
+projections — docs/benchmarks.md §4); ``achieved_k`` counts the
+actually-kept support of the emitted payload.
 """
 from __future__ import annotations
 
@@ -34,24 +35,9 @@ from repro.core.compressors.base import Deltas
 from repro.core.compressors.topk import SharedTopKCompressor
 from repro.kernels.ssm_apply.ref import ssm_apply_ef_ref
 from repro.kernels.topk_mask.ref import select_tau_ref
+from repro.roofline import composed_compress_bytes, fused_compress_bytes
 
 CONFIG_NAMES = ("whisper-base", "starcoder2-3b")
-
-_ITEM = 4           # f32 carrier
-_BISECT_ITERS = 24  # core/sparsify.topk_mask_threshold default
-
-
-def _composed_bytes(n: int) -> int:
-    """Reference threshold compress: absmax + 24 bisection count passes
-    (1 read each), 3 mask-apply rounds (read + write), EF residual
-    subtract (2 reads + 1 write)."""
-    return (1 + _BISECT_ITERS + 6 + 3) * n * _ITEM
-
-
-def _fused_bytes(n: int) -> int:
-    """Kernel pipeline: 3 selection passes (1 read each) + ONE fused
-    apply/cast/residual pass (3 reads + 4 writes)."""
-    return (3 + 3 + 4) * n * _ITEM
 
 
 def _deltas_for(tree) -> Deltas:
@@ -110,7 +96,7 @@ def run(sizes=(1 << 16, 1 << 20, 1 << 23), alpha=0.05, json_out=False,
         add(f"compress_threshold{label}", d, t_thr,
             f"speedup={t_sort / t_thr:.2f}x", k=k, achieved_k=ach,
             overselect_frac=round((ach - k) / k, 5),
-            bytes_moved=_composed_bytes(d),
+            bytes_moved=composed_compress_bytes(d),
             speedup_vs_reference=round(t_sort / t_thr, 3))
         fused_note = ("" if jax.default_backend() == "tpu" else
                       "off-TPU stand-in: composed-jnp form of the kernel "
@@ -118,8 +104,9 @@ def run(sizes=(1 << 16, 1 << 20, 1 << 23), alpha=0.05, json_out=False,
                       "not streaming) — bytes_moved models the TPU kernel")
         add(f"compress_fused{label}", d, t_fused,
             f"speedup={t_sort / t_fused:.2f}x", k=k,
-            bytes_moved=_fused_bytes(d),
-            gb_per_s=round(_fused_bytes(d) / (t_fused * 1e-6) / 1e9, 3),
+            bytes_moved=fused_compress_bytes(d),
+            gb_per_s=round(fused_compress_bytes(d) / (t_fused * 1e-6) / 1e9,
+                           3),
             speedup_vs_reference=round(t_sort / t_fused, 3),
             **({"note": fused_note} if fused_note else {}))
 

@@ -16,11 +16,14 @@ round's masked-away remainder is added back into the next round's input
 
 Hot path: with threshold masks (``exact_topk=False``) and the kernel
 backend active (``sparsify_backend`` / REPRO_SPARSIFY_BACKEND, auto on
-TPU), ``SharedTopKCompressor.compress`` runs the FUSED Pallas pipeline —
-streaming 3-pass tau selection, then mask apply + ``value_dtype`` wire
-cast + EF residual in one ``ssm_apply_ef`` pass — instead of 3-4
-composed elementwise rounds over HBM.  Backend rules and the fused
-contract: docs/kernels.md.
+TPU), ``compress`` runs the PACKED Pallas pipeline: every pytree leaf
+rides one tile-aligned buffer and the whole cohort costs exactly two
+launches — a segmented tau histogram, then fused refine/tau-pick/mask
+apply + ``value_dtype`` wire cast + EF residual
+(``core/sparsify.tree_shared_compress_packed`` for the shared mask,
+``tree_independent_compress_packed`` for FedAdam-Top's three masks) —
+instead of 4 launches per leaf.  Backend rules, layout and launch
+accounting: docs/kernels.md.
 
 See ``docs/compressors.md`` for the protocol and bit formulas.
 """
@@ -73,9 +76,11 @@ class _TopKBase(Compressor):
             S.use_kernel_path(self.sparsify_backend)
 
     def _fused_compress(self, dW, dM, dV, with_residual):
-        """Kernel-path fused compress; SharedTopK only.  Returns
-        (sW, sM, sV, err_tree | None, shared mask) or None when the
-        compressor has no fused realization."""
+        """Kernel-path fused compress.  Returns ``(sW, sM, sV,
+        err_tree | None, mask)`` — ``mask`` is one shared tree
+        (SharedTopK) or a ``(mW, mM, mV)`` tuple (IndependentTopK) —
+        or None when the compressor has no fused realization for these
+        inputs (e.g. mixed dtypes defeat the packed layout)."""
         return None
 
     def compress(self, deltas: Deltas, state):
@@ -85,11 +90,16 @@ class _TopKBase(Compressor):
         fused = self._fused_compress(dW, dM, dV, state is not None) \
             if self._kernel_path() else None
         if fused is not None:
-            # ONE streaming pass: mask apply on all three deltas, the
-            # value_dtype wire cast and the EF residual — instead of the
-            # 3-4 composed elementwise rounds below (docs/kernels.md)
+            # ONE streaming pipeline: mask apply on all three deltas, the
+            # value_dtype wire cast and the EF residual — two packed
+            # launches for the whole cohort instead of 4 per leaf
+            # (docs/kernels.md).  Independent compressors return a
+            # (mW, mM, mV) tuple; shared compressors one mask for all.
             sW, sM, sV, err, m = fused
-            mW = mM = mV = m
+            if isinstance(m, tuple):
+                mW, mM, mV = m
+            else:
+                mW = mM = mV = m
             new_state = {"err": err} if state is not None else None
         else:
             mW, mM, mV = self._masks(dW, dM, dV)
@@ -151,6 +161,16 @@ class IndependentTopKCompressor(_TopKBase):
         return masks.independent_masks(dW, dM, dV, self.alpha,
                                        self.mask_scope, self.exact_topk,
                                        backend=self.sparsify_backend)
+
+    def _fused_compress(self, dW, dM, dV, with_residual):
+        # three independent selections still collapse to TWO launches:
+        # all leaves of dW ++ dM ++ dV share one packed buffer whose
+        # segments each pick their own tau (core/sparsify)
+        if not S._uniform_dtype(dW, dM, dV):
+            return None
+        return S.tree_independent_compress_packed(
+            dW, dM, dV, self.alpha, self.mask_scope,
+            value_dtype=self.value_dtype, with_residual=with_residual)
 
     def bits_per_client(self, d: int) -> int:
         return comm.bits_fedadam_top(d, S.k_for(d, self.alpha), 1,

@@ -20,26 +20,46 @@ Backend dispatch
 ----------------
 Threshold-mask construction and the fused shared-mask compress have two
 interchangeable implementations: the streaming Pallas kernels
-(kernels/topk_mask + kernels/ssm_apply) and the pure-jnp references in
-this module.  :func:`resolve_backend` picks one — ``auto`` routes TPU to
-the kernels and everything else to the references; a ``FedConfig``/
-compressor ``sparsify_backend`` field or the ``REPRO_SPARSIFY_BACKEND``
-environment variable forces either (``kernel`` off-TPU runs the kernels
-in Pallas interpret mode, which is how CPU CI exercises them).  Rules
-and the fused-pass contract: docs/kernels.md.
+(kernels/topk_mask + kernels/ssm_apply + kernels/packed_topk) and the
+pure-jnp references in this module.  :func:`resolve_backend` picks one —
+``auto`` routes TPU to the kernels and everything else to the
+references; a ``FedConfig``/compressor ``sparsify_backend`` field or the
+``REPRO_SPARSIFY_BACKEND`` environment variable forces either
+(``kernel`` off-TPU runs the kernels in Pallas interpret mode, which is
+how CPU CI exercises them).
+
+Packed cohort layer
+-------------------
+On the kernel path, :class:`PackedLayout` flattens every pytree leaf
+into ONE (8, 128)-tile-aligned buffer so the whole-model compress costs
+exactly TWO Pallas launches instead of 4 per leaf:
+:func:`tree_shared_compress_packed` (shared mask, the default under
+:func:`tree_shared_compress_fused`) and
+:func:`tree_independent_compress_packed` (FedAdam-Top's three masks,
+one buffer, per-stream tau segments).  Outputs are bit-identical to the
+per-leaf path.  Rules, layout and launch accounting: docs/kernels.md.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import os
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.flatten_util import ravel_pytree
 
+from repro.kernels.packed_topk.ops import (
+    packed_apply_ef, packed_hist_kernel, packed_mask_apply)
+from repro.kernels.packed_topk.packed_topk import (
+    BLOCK_ELEMS as PACK_BLOCK_ELEMS, LANES as PACK_LANES)
+from repro.kernels.packed_topk.ref import refine_taus
 from repro.kernels.ssm_apply.ops import ssm_apply_ef
 from repro.kernels.topk_mask.ops import select_tau_kernel, topk_mask_kernel
+from repro.kernels.topk_mask.ref import log2_taus
 
 _F32 = jnp.float32
 
@@ -230,6 +250,225 @@ def tree_norm(tree):
 
 
 # ---------------------------------------------------------------------------
+# Packed cohort layout — every leaf through ONE buffer, 2 launches total
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """Static descriptor of a multi-leaf packed buffer.
+
+    Every leaf is flattened and zero-padded to a multiple of the
+    (8, 128) f32 min tile (``PACK_BLOCK_ELEMS`` = 1024 elements), then
+    the leaves are concatenated into one (R, 128) buffer.  All fields
+    are Python/static, so :meth:`unpack` is shape-only slicing (no
+    data-dependent work) and the layout never forces a host sync.
+
+    ``seg_of_leaf`` maps each leaf to its tau *segment*: identity for
+    scope="per_tensor", all-zeros for scope="global", and stream ids
+    for the independent compressor's 3-stream packing — the kernels
+    only ever see block->segment ids, so every scope is the same two
+    launches.  ``seg_ids`` (block->segment, one entry per (8, 128)
+    block) is the scalar-prefetch operand of both packed kernels.
+    """
+
+    shapes: tuple
+    sizes: tuple
+    padded: tuple
+    offsets: tuple
+    seg_of_leaf: tuple
+    num_segments: int
+    seg_sizes: tuple
+    seg_ids: jax.Array = dataclasses.field(compare=False, repr=False)
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def total(self) -> int:
+        return sum(self.padded)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.total // PACK_BLOCK_ELEMS
+
+    def pack(self, leaves: Sequence[jax.Array]) -> jax.Array:
+        """Flatten + pad + concatenate into the (R, 128) buffer.  All
+        offsets are static, so this lowers to dynamic_update_slices a
+        compiler can turn into plain copies."""
+        dtype = leaves[0].dtype
+        buf = jnp.zeros((self.total,), dtype)
+        for leaf, off in zip(leaves, self.offsets):
+            buf = lax.dynamic_update_slice(
+                buf, leaf.reshape(-1).astype(dtype), (off,))
+        return buf.reshape(-1, PACK_LANES)
+
+    def unpack(self, buf: jax.Array) -> list:
+        """Shape-only inverse of :meth:`pack` (padding discarded)."""
+        flat = buf.reshape(-1)
+        return [flat[off:off + n].reshape(shape) for off, n, shape
+                in zip(self.offsets, self.sizes, self.shapes)]
+
+
+def plan_packed_layout(leaves, groups: Optional[Sequence[int]] = None
+                       ) -> PackedLayout:
+    """Build the static :class:`PackedLayout` for a list of leaves.
+
+    ``groups`` assigns each leaf to a tau segment (default: one segment
+    per leaf, i.e. scope="per_tensor").  Segment ids must be dense in
+    ``range(max+1)``; a segment's leaves need not be contiguous in the
+    buffer — the kernels accumulate by block segment id."""
+    shapes = tuple(tuple(leaf.shape) for leaf in leaves)
+    sizes = tuple(int(leaf.size) for leaf in leaves)
+    padded = tuple(-(-n // PACK_BLOCK_ELEMS) * PACK_BLOCK_ELEMS
+                   for n in sizes)
+    offsets, off = [], 0
+    for p in padded:
+        offsets.append(off)
+        off += p
+    if groups is None:
+        groups = range(len(sizes))
+    # groups is always a host-side list of Python ints — the layout is
+    # static by construction, never built from traced values
+    seg_of_leaf = tuple(int(g) for g in groups)  # repro-lint: disable=jit-hazard
+    num_segments = max(seg_of_leaf) + 1
+    seg_sizes = [0] * num_segments
+    for n, g in zip(sizes, seg_of_leaf):
+        seg_sizes[g] += n
+    seg_ids = jnp.asarray(np.concatenate(
+        [np.full(p // PACK_BLOCK_ELEMS, g, np.int32)
+         for p, g in zip(padded, seg_of_leaf)]))
+    return PackedLayout(shapes=shapes, sizes=sizes, padded=padded,
+                        offsets=tuple(offsets), seg_of_leaf=seg_of_leaf,
+                        num_segments=num_segments,
+                        seg_sizes=tuple(seg_sizes), seg_ids=seg_ids)
+
+
+def _segment_absmax(layout: PackedLayout, score_leaves):
+    """Per-segment max|x| as a list of f32 scalars.  max is exact, so
+    the reduce over a segment's leaves is bitwise the raveled max the
+    per-leaf global path computes."""
+    per_leaf = [jnp.max(jnp.abs(leaf.astype(_F32)))
+                for leaf in score_leaves]
+    out = [None] * layout.num_segments
+    for am, g in zip(per_leaf, layout.seg_of_leaf):
+        out[g] = am if out[g] is None else jnp.maximum(out[g], am)
+    return out
+
+
+def _packed_select_inputs(layout: PackedLayout, score_leaves, score_p,
+                          alpha: float):
+    """Launch 1 (histogram) + the host-side CDF refine.  Returns the
+    prefetch operands of the apply launch: (taus2, ks, ns)."""
+    ks = jnp.asarray([k_for(n, alpha) for n in layout.seg_sizes], _F32)
+    ns = jnp.asarray(layout.seg_sizes, _F32)
+    absmax = _segment_absmax(layout, score_leaves)
+    edges = jnp.stack([log2_taus(a) for a in absmax])
+    c1 = packed_hist_kernel(score_p, layout.seg_ids, edges)
+    taus2 = refine_taus(c1, edges, absmax, ks)
+    return taus2, ks, ns
+
+
+def _leaf_masks(layout: PackedLayout, score_leaves, taus):
+    """Diagnostic boolean masks, recomputed per leaf from tau (same
+    compare the kernels use; XLA fuses it into consuming reductions)."""
+    return [jnp.abs(leaf.astype(_F32)) >= taus[g]
+            for leaf, g in zip(score_leaves, layout.seg_of_leaf)]
+
+
+def _uniform_dtype(*trees) -> bool:
+    dts = {leaf.dtype for t in trees if t is not None
+           for leaf in jax.tree_util.tree_leaves(t)}
+    return len(dts) == 1
+
+
+def tree_shared_compress_packed(score_tree, dW, dM, dV, alpha: float,
+                                scope: str = "per_tensor", *,
+                                value_dtype=None,
+                                with_residual: bool = False):
+    """Packed realization of the shared-mask compress: every leaf of
+    (score, dW, dM, dV) rides ONE tile-aligned buffer, and the whole
+    cohort costs exactly TWO Pallas launches — the segmented histogram
+    and the fused refine-count/tau-pick/apply pass — plus the jnp
+    absmax reduction and the O(L * N_BINS) host refine.
+
+    tau per segment is bitwise equal to the per-leaf
+    ``select_tau_kernel`` tau (same candidates, same pick), so outputs
+    — masks, wire-cast values, the EF residual — are bit-identical to
+    :func:`tree_shared_compress_fused`'s per-leaf path.  Same return
+    shape: ``(sW, sM, sV, err_tree | None, mask_tree)``."""
+    w_leaves, treedef = jax.tree_util.tree_flatten(dW)
+    m_leaves = treedef.flatten_up_to(dM)
+    v_leaves = treedef.flatten_up_to(dV)
+    s_leaves = (None if score_tree is None
+                else treedef.flatten_up_to(score_tree))
+    groups = None if scope == "per_tensor" else [0] * len(w_leaves)
+    layout = plan_packed_layout(w_leaves, groups)
+
+    wp = layout.pack(w_leaves)
+    mp = layout.pack(m_leaves)
+    vp = layout.pack(v_leaves)
+    sp = None if s_leaves is None else layout.pack(s_leaves)
+    score_leaves = w_leaves if s_leaves is None else s_leaves
+
+    taus2, ks, ns = _packed_select_inputs(
+        layout, score_leaves, wp if sp is None else sp, alpha)
+    outs = packed_apply_ef(taus2, layout.seg_ids, ks, ns, wp, mp, vp, sp,
+                           with_residual=with_residual,
+                           value_dtype=value_dtype)
+    taus = outs[-2][:, 0]
+    unflat = lambda buf: jax.tree_util.tree_unflatten(
+        treedef, layout.unpack(buf))
+    err_tree = unflat(outs[3]) if with_residual else None
+    mask_tree = jax.tree_util.tree_unflatten(
+        treedef, _leaf_masks(layout, score_leaves, taus))
+    return unflat(outs[0]), unflat(outs[1]), unflat(outs[2]), err_tree, \
+        mask_tree
+
+
+def tree_independent_compress_packed(dW, dM, dV, alpha: float,
+                                     scope: str = "per_tensor", *,
+                                     value_dtype=None,
+                                     with_residual: bool = False):
+    """Packed compress for the THREE-mask (FedAdam-Top) scheme: all
+    leaves of dW ++ dM ++ dV share one packed buffer, each stream's
+    leaves in their own tau segments (3L segments for "per_tensor",
+    3 for "global") — so three independent top-k selections still cost
+    the same TWO launches.  Each segment's score is the stream itself.
+
+    Returns ``(sW, sM, sV, err_tree | None, (mW, mM, mV))``; the
+    residual is dW's (the M/V rows of the kernel's residual output are
+    discarded, matching the composed path's EF contract)."""
+    w_leaves, treedef = jax.tree_util.tree_flatten(dW)
+    m_leaves = treedef.flatten_up_to(dM)
+    v_leaves = treedef.flatten_up_to(dV)
+    leaves = w_leaves + m_leaves + v_leaves
+    L = len(w_leaves)
+    if scope == "per_tensor":
+        groups = list(range(3 * L))
+    else:
+        groups = [0] * L + [1] * L + [2] * L
+    layout = plan_packed_layout(leaves, groups)
+
+    xp = layout.pack(leaves)
+    taus2, ks, ns = _packed_select_inputs(layout, leaves, xp, alpha)
+    outs = packed_mask_apply(taus2, layout.seg_ids, ks, ns, xp,
+                             with_residual=with_residual,
+                             value_dtype=value_dtype)
+    taus = outs[-2][:, 0]
+    sx = layout.unpack(outs[0])
+    unflat = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+    err_tree = (unflat(layout.unpack(outs[1])[:L])
+                if with_residual else None)
+    masks = _leaf_masks(layout, leaves, taus)
+    return (unflat(sx[:L]), unflat(sx[L:2 * L]), unflat(sx[2 * L:]),
+            err_tree,
+            (unflat(masks[:L]), unflat(masks[L:2 * L]),
+             unflat(masks[2 * L:])))
+
+
+# ---------------------------------------------------------------------------
 # Kernel-path fused shared-mask compress
 # ---------------------------------------------------------------------------
 
@@ -253,7 +492,8 @@ def _fused_leaf(score, w, m, v, k: int, value_dtype, with_residual: bool):
 def tree_shared_compress_fused(score_tree, dW, dM, dV, alpha: float,
                                scope: str = "per_tensor", *,
                                value_dtype=None,
-                               with_residual: bool = False):
+                               with_residual: bool = False,
+                               packed: bool = True):
     """Fused kernel-path realization of the shared-mask compress: for
     each leaf (or the raveled model when ``scope == "global"``), select
     tau with the streaming topk_mask kernel and apply mask + optional
@@ -264,9 +504,19 @@ def tree_shared_compress_fused(score_tree, dW, dM, dV, alpha: float,
     optimal ssm_w rule) — the kernel then derives the mask from the dW
     stream it is already reading instead of streaming a score tensor.
 
+    ``packed=True`` (the default) routes uniform-dtype cohorts through
+    :func:`tree_shared_compress_packed` — bit-identical outputs in TWO
+    Pallas launches total instead of 4 per leaf.  Mixed-dtype trees (no
+    single packed buffer dtype) and ``packed=False`` take the per-leaf
+    loop below.
+
     Returns ``(sW, sM, sV, err_tree | None, mask_tree)``; arithmetic is
     bit-identical to the composed reference ops given the same tau
     (asserted by tests/test_sparsify_dispatch.py)."""
+    if packed and _uniform_dtype(score_tree, dW, dM, dV):
+        return tree_shared_compress_packed(
+            score_tree, dW, dM, dV, alpha, scope,
+            value_dtype=value_dtype, with_residual=with_residual)
     if scope == "global":
         flat_w, unravel = ravel_pytree(dW)
         flat_m, _ = ravel_pytree(dM)

@@ -1,0 +1,1 @@
+from repro.kernels.packed_topk import ops, ref  # noqa: F401

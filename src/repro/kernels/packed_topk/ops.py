@@ -1,0 +1,81 @@
+"""Public packed-cohort ops: whole-model compress in TWO Pallas launches.
+
+    c1                  = packed_hist_kernel(score_p, seg_ids, edges)
+    taus2               = ref.refine_taus(c1, edges, absmax, ks)   # host
+    sW, sM, sV, err, tau, cnt = packed_apply_ef(
+        taus2, seg_ids, ks, ns, dW_p, dM_p, dV_p)
+
+vs 4 launches PER LEAF on the per-leaf path (absmax, two count passes,
+fused apply).  The buffers are (R, 128) packed cohorts built by
+``core/sparsify.PackedLayout``; ``seg_ids`` maps each (8, 128) block to
+its tau segment (one per leaf for scope="per_tensor", a single segment
+for scope="global"), so both scopes are the same two launches.
+
+``packed_mask_apply`` is the single-stream variant for the independent
+(three-mask) compressor, which packs all of dW ++ dM ++ dV into ONE
+buffer whose segments each select their own tau — still two launches
+for all three trees.
+
+tau semantics are IDENTICAL to ``topk_mask.select_tau_kernel`` — same
+candidate construction, same first-count->=k pick, same degenerate
+k >= n guard — so the ``overselect_bound`` contract carries over
+unchanged, and tau (hence every masked value and the EF residual) is
+bitwise equal to the per-leaf path's.  Oracles: ref.py; parity:
+tests/test_kernels.py; layout + drivers: core/sparsify.py; contract
+walkthrough: docs/kernels.md.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.packed_topk.packed_topk import (
+    BLOCK_ELEMS, LANES, N_BINS, SUBLANES, packed_apply_2d, packed_hist_2d)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def packed_hist_kernel(xp, seg_ids, edges):
+    """Segmented 32-bin histogram over a packed (R, 128) buffer: counts
+    of |x| >= edges[seg, j] per segment.  ONE launch; selection's only
+    full-data Pallas pass (the refine counts ride in the apply launch).
+
+    ``xp``: (R, LANES) tile-aligned packed cohort; ``seg_ids``: (R //
+    SUBLANES,) int32 block->segment map; ``edges``: (L, N_BINS) f32
+    descending candidates per segment.  Returns (L, N_BINS) f32 counts.
+    """
+    return packed_hist_2d(xp, seg_ids, edges, interpret=_interpret())
+
+
+def packed_apply_ef(taus2, seg_ids, ks, ns, dw, dm, dv, score=None, *,
+                    with_residual: bool = True, value_dtype=None):
+    """Fused refine-count + tau-pick + shared-mask apply.  ONE launch.
+
+    Sweep 0 counts |score| (|dW| when ``score is None`` — the ssm_w
+    rule) against the prefetched ``taus2`` (L, N_BINS) refine
+    candidates; sweep 1 picks each segment's tau (first count >= k) and
+    streams ``where(keep, cast(x), 0)`` over all three deltas plus the
+    optional error-feedback residual ``dw - sw``, exactly
+    ``ssm_apply_ef``'s arithmetic.  ``ks``/``ns``: (L,) f32 per-segment
+    k and true (unpadded) element counts.
+
+    Returns ``(sw, sm, sv, [err], taus, counts)`` with ``taus``/
+    ``counts`` of shape (L, 1).
+    """
+    return packed_apply_2d(taus2, seg_ids, ks, ns, (dw, dm, dv), score,
+                           with_residual=with_residual,
+                           value_dtype=value_dtype, interpret=_interpret())
+
+
+def packed_mask_apply(taus2, seg_ids, ks, ns, x, *,
+                      with_residual: bool = True, value_dtype=None):
+    """Single-stream packed compress (independent masks: every segment's
+    score is the stream itself).  ONE launch.
+
+    Returns ``(sx, [err], taus, counts)``; ``err`` is ``x - sx`` (the
+    caller keeps only the dW segments' rows of it).
+    """
+    return packed_apply_2d(taus2, seg_ids, ks, ns, (x,), None,
+                           with_residual=with_residual,
+                           value_dtype=value_dtype, interpret=_interpret())

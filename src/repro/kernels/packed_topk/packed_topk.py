@@ -1,0 +1,244 @@
+"""Packed multi-leaf threshold selection + fused apply — 2 launches/cohort.
+
+The per-leaf hot path (kernels/topk_mask + kernels/ssm_apply) costs 4
+Pallas launches PER PYTREE LEAF (absmax, 2 count passes, fused apply): a
+whisper-base client pays ~100 kernel round trips per round.  These
+kernels batch every leaf of the (score, dW, dM, dV) cohort through ONE
+tile-aligned packed buffer (layout: core/sparsify.PackedLayout) so the
+whole-model compress is exactly TWO launches:
+
+  launch 1 (``_hist_kernel``)  — segmented log2 histogram: each (8, 128)
+      block accumulates count(|x| >= edge_j) for its segment's 32
+      scalar-prefetch-indexed bin edges into a VMEM-resident (L, 32)
+      accumulator (rows = segments; one row for scope="global").
+  host refine (no launch)      — the CDF bracket (first bin with count
+      >= k) and the 32 linear-refine candidates are derived from the
+      (L, 32) histogram with the SAME eager jnp arithmetic as the
+      per-leaf ``select_tau_kernel``, so the candidate taus are
+      bit-identical to the per-leaf path's.
+  launch 2 (``_make_apply_kernel``) — a (2, nb) two-sweep grid: sweep 0
+      counts |score| against the prefetched refine candidates into VMEM
+      scratch; sweep 1 PICKS tau per segment from the completed counts
+      (a select, not arithmetic — so tau is bit-exact vs per-leaf) and
+      streams mask-apply x3 + ``value_dtype`` wire cast + error-feedback
+      residual, extending kernels/ssm_apply's fused structure.
+
+Why the tau *pick* lives in the kernel: deriving tau needs the refine
+counts, which need a full pass over the data — folding that pass into
+the apply launch (sweep 0) is what collapses selection+apply to one
+launch without giving up the 3-pass algorithm's ``overselect_bound``
+contract.  The w/m/v streams use a ``(i * p, 0)`` index map so sweep 0
+re-fetches only block 0 (revisited = free) instead of streaming the
+whole tensor twice; only the score stream is read in both sweeps.
+
+Padding is inert: per-leaf zero padding never counts (all candidate
+edges are > 0 unless a segment is all-zero, where tau = 0 anyway) and
+never survives the mask for tau > 0.  Counts accumulate in f32 — exact
+integers below 2^24 per block, add-chain error << 1 count to d <= 2^40
+(same argument as kernels/topk_mask).  Contract and launch accounting:
+docs/kernels.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# One packed block = the (8, 128) f32 min tile; per-leaf padding rounds
+# to BLOCK_ELEMS, so small leaves waste at most one tile each (vs one
+# (8, 1024) super-tile per leaf on the per-leaf path).
+LANES = 128
+SUBLANES = 8
+BLOCK = (SUBLANES, LANES)
+BLOCK_ELEMS = SUBLANES * LANES
+N_BINS = 32
+
+
+def _hist_kernel(seg_ref, e_ref, x_ref, c_ref):
+    i = pl.program_id(0)
+    seg = seg_ref[i]
+    a = jnp.abs(x_ref[...].astype(jnp.float32))
+    edges = e_ref[...]                               # (1, N_BINS)
+
+    @pl.when(i == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    # unrolled over the N_BINS candidates: VPU reductions in registers,
+    # then one accumulate into this segment's histogram row
+    cols = [jnp.sum((a >= edges[0, j]).astype(jnp.float32))
+            for j in range(N_BINS)]
+    row = jnp.stack(cols).reshape(1, N_BINS)
+    cur = pl.load(c_ref, (pl.ds(seg, 1), slice(None)))
+    pl.store(c_ref, (pl.ds(seg, 1), slice(None)), cur + row)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def packed_hist_2d(xp, seg_ids, edges, *, interpret: bool = True):
+    """Segmented histogram over a packed (R, LANES) buffer.
+
+    ``seg_ids``: (nb,) int32 segment of each (8, 128) block (scalar
+    prefetch — it also drives the edge-row BlockSpec index map);
+    ``edges``: (L, N_BINS) descending per-segment candidates.  Returns
+    (L, N_BINS) f32 counts of |x| >= edge_j per segment.  ONE launch.
+    """
+    nb = xp.shape[0] // SUBLANES
+    L = edges.shape[0]
+    return pl.pallas_call(
+        _hist_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb,),
+            in_specs=[
+                # one segment's edge row, picked by the prefetched seg id
+                pl.BlockSpec(  # repro-lint: disable=pallas-contract
+                    (1, N_BINS), lambda i, seg: (seg[i], 0)),
+                pl.BlockSpec(BLOCK, lambda i, seg: (i, 0)),
+            ],
+            # deliberately sub-tile: the (L, N_BINS) histogram rows are
+            # revisited every grid step, not streamed
+            out_specs=pl.BlockSpec(  # repro-lint: disable=pallas-contract
+                (L, N_BINS), lambda i, seg: (0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((L, N_BINS), jnp.float32),
+        interpret=interpret,
+    )(seg_ids, edges, xp)
+
+
+def _make_apply_kernel(n_streams: int, has_score: bool,
+                       with_residual: bool, value_dtype):
+    """Two-sweep fused kernel body.  Static shape:
+    scalar prefetch  seg_ids, ks, ns
+    inputs           taus2 row, [score?], x_0 .. x_{n_streams-1}
+    outputs          s_0 .. s_{n_streams-1}, [err?], taus, counts
+    scratch          (L, N_BINS) refine-count accumulator
+
+    Sweep p=0 counts |score| >= taus2_j into the scratch row of this
+    block's segment; sweep p=1 picks tau (first candidate whose count
+    reaches k — exactly the per-leaf selection rule, ties included),
+    then applies keep/cast/residual to every stream.  ``err`` is the
+    residual of stream 0 (dW), matching ssm_apply_ef's contract."""
+    vdt = None if value_dtype is None else jnp.dtype(value_dtype)
+
+    def cast(x):
+        return x if vdt is None else x.astype(vdt).astype(x.dtype)
+
+    def kernel(seg_ref, ks_ref, ns_ref, t2_ref, *refs):
+        *io, c2_ref = refs
+        if has_score:
+            score_ref, io = io[0], io[1:]
+        ins, outs = io[:n_streams], io[n_streams:]
+        if not has_score:
+            score_ref = ins[0]
+        p = pl.program_id(0)
+        i = pl.program_id(1)
+        seg = seg_ref[i]
+        a = jnp.abs(score_ref[...].astype(jnp.float32))
+        taus2 = t2_ref[...]                          # (1, N_BINS)
+
+        @pl.when((p == 0) & (i == 0))
+        def _init():
+            c2_ref[...] = jnp.zeros_like(c2_ref)
+
+        @pl.when(p == 0)
+        def _count():
+            cols = [jnp.sum((a >= taus2[0, j]).astype(jnp.float32))
+                    for j in range(N_BINS)]
+            row = jnp.stack(cols).reshape(1, N_BINS)
+            cur = pl.load(c2_ref, (pl.ds(seg, 1), slice(None)))
+            pl.store(c2_ref, (pl.ds(seg, 1), slice(None)), cur + row)
+
+        @pl.when(p == 1)
+        def _apply():
+            k = ks_ref[seg]
+            n = ns_ref[seg]
+            c2 = pl.load(c2_ref, (pl.ds(seg, 1), slice(None)))
+            iota = lax.broadcasted_iota(jnp.int32, (1, N_BINS), 1)
+            idx2 = jnp.argmax(c2 >= k)
+            # scalar pick from a (1, N_BINS) row — a select, not
+            # arithmetic, so tau is bitwise one of the prefetched
+            # candidates (the bit-exactness hinge; see module docstring)
+            sel = lambda row, j: jnp.sum(jnp.where(iota == j, row, 0.0))
+            tau = sel(taus2, idx2)
+            cnt = sel(c2, idx2)
+            tau = jnp.where(k >= n, jnp.zeros((), jnp.float32), tau)
+            cnt = jnp.where(k >= n, n, cnt)
+
+            keep = a >= tau
+            x0 = ins[0][...]
+            zero = jnp.zeros((), x0.dtype)
+            s0 = jnp.where(keep, cast(x0), zero)
+            outs[0][...] = s0
+            for t in range(1, n_streams):
+                outs[t][...] = jnp.where(
+                    keep, cast(ins[t][...]),
+                    jnp.zeros((), ins[t].dtype))
+            nxt = n_streams
+            if with_residual:
+                outs[nxt][...] = (x0.astype(jnp.float32)
+                                  - s0.astype(jnp.float32)).astype(x0.dtype)
+                nxt += 1
+            pl.store(outs[nxt], (pl.ds(seg, 1), pl.ds(0, 1)),
+                     tau.reshape(1, 1))
+            pl.store(outs[nxt + 1], (pl.ds(seg, 1), pl.ds(0, 1)),
+                     cnt.reshape(1, 1))
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("with_residual", "value_dtype",
+                                             "interpret"))
+def packed_apply_2d(taus2, seg_ids, ks, ns, streams, sp=None, *,
+                    with_residual: bool = True, value_dtype=None,
+                    interpret: bool = True):
+    """Two-sweep fused refine-count + tau-pick + mask-apply.  ONE launch.
+
+    ``streams``: tuple of packed (R, LANES) buffers sharing the mask
+    (the (dW, dM, dV) triple for the shared-mask compress; a 1-tuple
+    for the independent compress, where every stream is its own score).
+    ``sp``: optional packed score buffer (non-ssm_w rules).  Returns
+    ``(*sparse_streams, [err], taus (L, 1), counts (L, 1))``; ``err``
+    is stream 0's error-feedback residual.
+    """
+    streams = tuple(streams)
+    n_streams = len(streams)
+    nb = streams[0].shape[0] // SUBLANES
+    L = ks.shape[0]
+    has_score = sp is not None
+    # the count sweep (p=0) reads only the score stream; w/m/v index
+    # maps collapse to block 0 there so their HBM traffic happens once
+    stream_spec = pl.BlockSpec(BLOCK, lambda p, i, *s: (i, 0))
+    lazy_spec = pl.BlockSpec(BLOCK, lambda p, i, *s: (i * p, 0))
+    row_spec = pl.BlockSpec(  # repro-lint: disable=pallas-contract
+        (L, 1), lambda p, i, *s: (0, 0))
+    ins = ([sp] if has_score else []) + list(streams)
+    in_specs = [
+        pl.BlockSpec(  # repro-lint: disable=pallas-contract
+            (1, N_BINS), lambda p, i, seg, *s: (seg[i], 0)),
+    ]
+    if has_score:
+        in_specs += [stream_spec] + [lazy_spec] * n_streams
+    else:
+        in_specs += [stream_spec] + [lazy_spec] * (n_streams - 1)
+    n_data_out = n_streams + (1 if with_residual else 0)
+    out_specs = tuple([lazy_spec] * n_data_out + [row_spec, row_spec])
+    out_shape = tuple(
+        jax.ShapeDtypeStruct(t.shape, t.dtype)
+        for t in streams + ((streams[0],) if with_residual else ())
+    ) + (jax.ShapeDtypeStruct((L, 1), jnp.float32),) * 2
+    return pl.pallas_call(
+        _make_apply_kernel(n_streams, has_score, with_residual, value_dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(2, nb),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((L, N_BINS), jnp.float32)],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(seg_ids, ks, ns, taus2, *ins)

@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for the packed cohort-compression kernels.
+
+The count oracles mirror the kernels' execution order exactly — a scan
+over (8, 128)-blocks accumulating into an (L, N_BINS) carry, the jnp
+rendering of the grid loop + VMEM accumulator — so the f32 addition
+order (hence every count bit) matches the kernel, and the scan form is
+also the efficient CPU stand-in the benchmark harness times (reduction
+over the minor axis; no (n, N_BINS) materialization).
+
+``refine_taus`` is the HOST half of packed selection: it turns the
+launch-1 histogram into the per-segment linear-refine candidate rows
+with the same op-for-op eager arithmetic as the per-leaf
+``select_tau_kernel`` (argmax bracket, ``linear_taus``), which is what
+makes the packed tau bitwise equal to the per-leaf tau.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.packed_topk.packed_topk import (
+    BLOCK_ELEMS, LANES, N_BINS, SUBLANES)
+from repro.kernels.topk_mask.ref import linear_taus
+
+
+def _block_view(xp):
+    """(R, LANES) packed buffer -> (nb, BLOCK_ELEMS) kernel-block rows."""
+    return jnp.abs(xp.astype(jnp.float32)).reshape(-1, BLOCK_ELEMS)
+
+
+def packed_hist_ref(xp, seg_ids, edges):
+    """Oracle for ``packed_hist_2d`` / ``packed_hist_kernel``: per-block
+    count of |x| >= edge_j accumulated into the block's segment row, in
+    kernel block order."""
+    a2 = _block_view(xp)
+    L = edges.shape[0]
+
+    def body(acc, blk):
+        a_blk, seg = blk
+        row = jnp.sum(edges[seg][:, None] <= a_blk[None, :], axis=1,
+                      dtype=jnp.float32)
+        return acc.at[seg].add(row), None
+
+    acc, _ = lax.scan(body, jnp.zeros((L, N_BINS), jnp.float32),
+                      (a2, seg_ids))
+    return acc
+
+
+def refine_taus(counts, edges, absmax, ks):
+    """Per-segment linear-refine candidate rows from the histogram CDF.
+
+    ``counts``/``edges``: (L, N_BINS); ``absmax``: length-L sequence of
+    f32 scalars; ``ks``: (L,) f32.  Returns (L, N_BINS).  Deliberately a
+    per-segment Python loop of SCALAR jnp ops — the identical expression
+    sequence ``select_tau_kernel`` evaluates per leaf, so each candidate
+    row is bitwise the per-leaf ``linear_taus(lo, hi)`` row (a batched
+    rendering may fuse the multiply-subtract differently and drift by an
+    ulp, which would break the packed==per-leaf tau guarantee)."""
+    rows = []
+    for s in range(counts.shape[0]):
+        idx = jnp.argmax(counts[s] >= ks[s])
+        hi = jnp.where(idx > 0, edges[s][idx - 1], absmax[s])
+        lo = edges[s][idx]
+        rows.append(linear_taus(lo, hi))
+    return jnp.stack(rows)
+
+
+def _pick_taus(taus2, c2, ks, ns):
+    """First candidate whose count reaches k, per segment (degenerate
+    k >= n keeps everything: tau = 0, count = n)."""
+    idx2 = jnp.argmax(c2 >= ks[:, None], axis=1)
+    tau = jnp.take_along_axis(taus2, idx2[:, None], 1)[:, 0]
+    cnt = jnp.take_along_axis(c2, idx2[:, None], 1)[:, 0]
+    tau = jnp.where(ks >= ns, jnp.zeros((), jnp.float32), tau)
+    cnt = jnp.where(ks >= ns, ns, cnt)
+    return tau, cnt
+
+
+def _cast(value_dtype, x):
+    if value_dtype is None:
+        return x
+    vdt = jnp.dtype(value_dtype)
+    return x.astype(vdt).astype(x.dtype)
+
+
+def packed_apply_ef_ref(taus2, seg_ids, ks, ns, streams, sp=None, *,
+                        with_residual: bool = True, value_dtype=None):
+    """Oracle for ``packed_apply_2d`` / ``packed_apply_ef``: refine-count
+    (same scan as the kernel's sweep 0), tau pick, then the composed
+    mask/cast/residual elementwise ops."""
+    streams = tuple(streams)
+    score = streams[0] if sp is None else sp
+    c2 = packed_hist_ref(score, seg_ids, taus2)
+    tau, cnt = _pick_taus(taus2, c2, ks, ns)
+    tau_e = tau[seg_ids].repeat(BLOCK_ELEMS).reshape(score.shape[0], LANES)
+    keep = jnp.abs(score.astype(jnp.float32)) >= tau_e
+    outs = []
+    for x in streams:
+        outs.append(jnp.where(keep, _cast(value_dtype, x),
+                              jnp.zeros((), x.dtype)))
+    if with_residual:
+        x0, s0 = streams[0], outs[0]
+        outs.append((x0.astype(jnp.float32) - s0.astype(jnp.float32))
+                    .astype(x0.dtype))
+    return tuple(outs) + (tau.reshape(-1, 1), cnt.reshape(-1, 1))
+
+
+def packed_mask_apply_ref(taus2, seg_ids, ks, ns, xp, *,
+                          with_residual: bool = True, value_dtype=None):
+    """Single-stream oracle (independent compress: each stream is its
+    own score)."""
+    return packed_apply_ef_ref(taus2, seg_ids, ks, ns, (xp,),
+                               with_residual=with_residual,
+                               value_dtype=value_dtype)

@@ -26,6 +26,71 @@ HBM_BW = 819e9               # bytes/s
 ICI_BW = 50e9                # bytes/s/link
 ICI_LINKS = 3                # usable links per chip in a 2D torus (approx)
 
+# ---------------------------------------------------------------------------
+# Analytic HBM byte models of the compression hot path.
+#
+# Single source of truth (docs/benchmarks.md §4): the benchmark suites
+# (benchmarks/kernel_bench.py, benchmarks/compress_bench.py) derive every
+# ``bytes_moved`` / GB/s figure from THESE helpers, and any roofline
+# memory-term projection of the compress step divides the same numbers by
+# HBM_BW — so benchmark bandwidth and roofline projections cannot drift.
+# ``n`` is elements, ``itemsize`` the carrier width (4 = f32 wire).
+# ---------------------------------------------------------------------------
+
+#: Bisection iterations of core/sparsify.topk_mask_threshold (reference).
+BISECT_ITERS = 24
+
+
+def selection_bytes(n: int, itemsize: int = 4) -> int:
+    """Per-leaf 3-pass streaming tau selection (kernels/topk_mask):
+    absmax + two count passes, each ONE read of x."""
+    return 3 * n * itemsize
+
+
+def fused_apply_bytes(n: int, itemsize: int = 4) -> int:
+    """Fused ssm_apply_ef: read dW/dM/dV once, write sW/sM/sV + residual
+    (4th output) once — 3 reads + 4 writes."""
+    return 7 * n * itemsize
+
+
+def packed_select_bytes(n: int, itemsize: int = 4) -> int:
+    """Packed cohort selection (kernels/packed_topk): the jnp absmax
+    reduction (1 read) + the segmented-histogram launch (1 read); the
+    refine counts ride in the apply launch, so selection's own traffic
+    drops from 3 passes to 2."""
+    return 2 * n * itemsize
+
+
+def packed_apply_bytes(n: int, itemsize: int = 4) -> int:
+    """Packed two-sweep apply launch: sweep 0 re-reads the score stream
+    for the refine counts (1 read), sweep 1 streams dW/dM/dV (3 reads)
+    and writes sW/sM/sV + residual (4 writes)."""
+    return 8 * n * itemsize
+
+
+def composed_compress_bytes(n: int, itemsize: int = 4,
+                            bisect_iters: int = BISECT_ITERS) -> int:
+    """Reference threshold compress: absmax + ``bisect_iters`` bisection
+    count passes (1 read each), 3 mask-apply rounds (read + write), EF
+    residual subtract (2 reads + 1 write)."""
+    return (1 + bisect_iters + 6 + 3) * n * itemsize
+
+
+def fused_compress_bytes(n: int, itemsize: int = 4) -> int:
+    """Per-leaf kernel pipeline end to end: 3-pass selection + one fused
+    apply/cast/residual pass."""
+    return selection_bytes(n, itemsize) + fused_apply_bytes(n, itemsize)
+
+
+def packed_compress_bytes(n: int, itemsize: int = 4) -> int:
+    """Packed pipeline end to end (2 launches): histogram selection +
+    two-sweep apply.  Deliberately the SAME 10n total as
+    :func:`fused_compress_bytes` — the packed win is launch count
+    (2 per cohort vs 4 per leaf) and pass fusion, not HBM traffic; the
+    bandwidth-bound asymptote is identical (docs/kernels.md)."""
+    return packed_select_bytes(n, itemsize) + packed_apply_bytes(n, itemsize)
+
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,

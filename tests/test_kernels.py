@@ -5,13 +5,19 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import sparsify as S
 from repro.kernels.fused_adam import ops as fa_ops
 from repro.kernels.fused_adam.ref import fused_adam_ref
+from repro.kernels.packed_topk import ops as pk_ops
+from repro.kernels.packed_topk.ref import (packed_apply_ef_ref,
+                                           packed_hist_ref,
+                                           packed_mask_apply_ref,
+                                           refine_taus)
 from repro.kernels.ssm_apply import ops as sa_ops
 from repro.kernels.ssm_apply.ref import ssm_apply_ref
 from repro.kernels.topk_mask import ops as tm_ops
-from repro.kernels.topk_mask.ref import (select_tau_ref, topk_mask_exact,
-                                         topk_mask_ref)
+from repro.kernels.topk_mask.ref import (log2_taus, select_tau_ref,
+                                         topk_mask_exact, topk_mask_ref)
 from repro.optim import AdamHyper
 
 SHAPES = [(64,), (8192,), (8, 1024), (3, 5, 7), (50_000,), (2, 8192, 3)]
@@ -99,6 +105,100 @@ def test_kernel_pipeline_equals_algorithm():
     assert bool(jnp.all((sw != 0) == mask))
     assert bool(jnp.all(jnp.where(mask, dm, 0) == sm))
     assert bool(jnp.all(jnp.where(mask, dv, 0) == sv))
+
+
+# --- packed cohort kernels (kernels/packed_topk) ---------------------------
+
+PACKED_SHAPES = ((37,), (3, 5, 7), (8, 1024), (2000,), (50_000,))
+
+
+def _packed_fixture(seed, dtype, groups=None):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(PACKED_SHAPES))
+    leaves = [jax.random.normal(k, s).astype(dtype)
+              for k, s in zip(keys, PACKED_SHAPES)]
+    layout = S.plan_packed_layout(leaves, groups)
+    return layout, leaves
+
+
+def _select_inputs_ref(layout, leaves, xp, alpha=0.05):
+    """taus2/ks/ns through the REF histogram, so kernel-vs-ref apply
+    comparisons share identical prefetch operands."""
+    ks = jnp.asarray([S.k_for(n, alpha) for n in layout.seg_sizes],
+                     jnp.float32)
+    ns = jnp.asarray(layout.seg_sizes, jnp.float32)
+    absmax = S._segment_absmax(layout, leaves)
+    edges = jnp.stack([log2_taus(a) for a in absmax])
+    c1 = packed_hist_ref(xp, layout.seg_ids, edges)
+    return refine_taus(c1, edges, absmax, ks), ks, ns, edges
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("scope", ["per_tensor", "global"])
+def test_packed_hist_kernel_matches_ref(dtype, scope):
+    groups = None if scope == "per_tensor" else [0] * len(PACKED_SHAPES)
+    layout, leaves = _packed_fixture(7, dtype, groups)
+    xp = layout.pack(leaves)
+    _, _, _, edges = _select_inputs_ref(layout, leaves, xp)
+    c_k = pk_ops.packed_hist_kernel(xp, layout.seg_ids, edges)
+    c_r = packed_hist_ref(xp, layout.seg_ids, edges)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+
+
+@pytest.mark.parametrize("with_residual", [False, True])
+@pytest.mark.parametrize("value_dtype", [None, "bfloat16"])
+@pytest.mark.parametrize("has_score", [False, True])
+def test_packed_apply_ef_matches_ref(with_residual, value_dtype, has_score):
+    layout, w_leaves = _packed_fixture(8, jnp.float32)
+    _, m_leaves = _packed_fixture(9, jnp.float32)
+    _, v_leaves = _packed_fixture(10, jnp.float32)
+    wp, mp, vp = (layout.pack(ls) for ls in (w_leaves, m_leaves, v_leaves))
+    if has_score:
+        _, s_leaves = _packed_fixture(11, jnp.float32)
+        sp, score_leaves = layout.pack(s_leaves), s_leaves
+    else:
+        sp, score_leaves = None, w_leaves
+    taus2, ks, ns, _ = _select_inputs_ref(
+        layout, score_leaves, wp if sp is None else sp)
+    out_k = pk_ops.packed_apply_ef(taus2, layout.seg_ids, ks, ns,
+                                   wp, mp, vp, sp,
+                                   with_residual=with_residual,
+                                   value_dtype=value_dtype)
+    out_r = packed_apply_ef_ref(taus2, layout.seg_ids, ks, ns,
+                                (wp, mp, vp), sp,
+                                with_residual=with_residual,
+                                value_dtype=value_dtype)
+    assert len(out_k) == len(out_r) == (6 if with_residual else 5)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_packed_mask_apply_matches_ref(dtype):
+    # independent-compress shape: one buffer, one tau segment per leaf
+    layout, leaves = _packed_fixture(12, dtype)
+    xp = layout.pack(leaves)
+    taus2, ks, ns, _ = _select_inputs_ref(layout, leaves, xp)
+    out_k = pk_ops.packed_mask_apply(taus2, layout.seg_ids, ks, ns, xp,
+                                     value_dtype="bfloat16")
+    out_r = packed_mask_apply_ref(taus2, layout.seg_ids, ks, ns, xp,
+                                  value_dtype="bfloat16")
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packed_tau_equals_perleaf_tau():
+    """The hinge of the whole packed design: each segment's tau (and
+    kept count) is BITWISE the per-leaf 3-pass select_tau_kernel's."""
+    layout, leaves = _packed_fixture(13, jnp.float32)
+    xp = layout.pack(leaves)
+    taus2, ks, ns, _ = _select_inputs_ref(layout, leaves, xp)
+    outs = pk_ops.packed_mask_apply(taus2, layout.seg_ids, ks, ns, xp)
+    taus, cnts = outs[-2][:, 0], outs[-1][:, 0]
+    for i, leaf in enumerate(leaves):
+        tau_i, cnt_i = tm_ops.select_tau_kernel(
+            leaf, S.k_for(leaf.size, 0.05))
+        assert float(taus[i]) == float(tau_i), f"leaf {i} tau"
+        assert float(cnts[i]) == float(cnt_i), f"leaf {i} count"
 
 
 def test_fused_adam_in_optimizer_loop():

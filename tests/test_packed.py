@@ -1,0 +1,319 @@
+"""Packed cohort-compression pipeline: layout round-trip, parity with the
+per-leaf fused path and the composed mask ops, and the launch-count
+regression gate (the whole point of the packed design: TWO Pallas
+launches per compress, not 4 per leaf)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import masks as M
+from repro.core import sparsify as S
+from repro.core.compressors.base import Deltas
+from repro.core.compressors.topk import IndependentTopKCompressor
+from repro.kernels.packed_topk.packed_topk import BLOCK_ELEMS, LANES
+
+ALPHA = 0.05
+
+# ragged on purpose: sub-tile leaves (< 1024 elements), exact-tile leaves,
+# ND leaves, and leaves spanning many blocks
+RAGGED_SHAPES = [(1,), (37,), (1023,), (1024,), (1025,), (3, 5, 7),
+                 (8, 128), (8, 1024), (2000,), (50_000,)]
+
+
+def _leaves(seed, shapes=RAGGED_SHAPES, dtype=jnp.float32, scale=1.0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return [jax.random.normal(k, s).astype(dtype) * scale
+            for k, s in zip(keys, shapes)]
+
+
+def _trees(seed, shapes=RAGGED_SHAPES, dtype=jnp.float32):
+    names = [f"l{i}" for i in range(len(shapes))]
+    dW = dict(zip(names, _leaves(seed, shapes, dtype)))
+    dM = dict(zip(names, _leaves(seed + 1, shapes, dtype, 0.1)))
+    dV = {n: jnp.abs(v) for n, v in
+          zip(names, _leaves(seed + 2, shapes, dtype, 0.01))}
+    return dW, dM, dV
+
+
+def _assert_tree_equal(a, b, what=""):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"{what}: treedef mismatch"
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{what} leaf {i}")
+
+
+# --- layout ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_packed_layout_roundtrip(dtype):
+    leaves = _leaves(0, dtype=dtype)
+    layout = S.plan_packed_layout(leaves)
+    buf = layout.pack(leaves)
+    # tile-aligned: every leaf starts on a (8, 128)-block boundary
+    assert buf.shape == (layout.total // LANES, LANES)
+    assert all(off % BLOCK_ELEMS == 0 for off in layout.offsets)
+    assert layout.total % BLOCK_ELEMS == 0
+    assert layout.seg_ids.shape == (layout.num_blocks,)
+    out = layout.unpack(buf)
+    for orig, back in zip(leaves, out):
+        assert back.shape == orig.shape and back.dtype == orig.dtype
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(orig))
+
+
+def test_packed_layout_padding_is_zero():
+    leaves = _leaves(1)
+    layout = S.plan_packed_layout(leaves)
+    flat = np.asarray(layout.pack(leaves)).reshape(-1)
+    used = np.zeros(layout.total, bool)
+    for off, n in zip(layout.offsets, layout.sizes):
+        used[off:off + n] = True
+    np.testing.assert_array_equal(flat[~used], 0.0)
+
+
+def test_packed_layout_groups():
+    leaves = _leaves(2)
+    L = len(leaves)
+    per_tensor = S.plan_packed_layout(leaves)
+    assert per_tensor.num_segments == L
+    assert per_tensor.seg_sizes == per_tensor.sizes
+    glob = S.plan_packed_layout(leaves, [0] * L)
+    assert glob.num_segments == 1
+    assert glob.seg_sizes == (sum(glob.sizes),)
+    assert bool(jnp.all(glob.seg_ids == 0))
+
+
+# --- parity: packed vs per-leaf fused vs composed mask ops ----------------
+
+
+@pytest.mark.parametrize("scope", ["per_tensor", "global"])
+def test_packed_bit_exact_vs_perleaf_fused(scope):
+    """The tentpole guarantee: every output of the packed two-launch
+    pipeline — values, wire-cast, EF residual, masks — is BITWISE the
+    per-leaf fused path's."""
+    dW, dM, dV = _trees(10)
+    packed = S.tree_shared_compress_packed(
+        None, dW, dM, dV, ALPHA, scope,
+        value_dtype="bfloat16", with_residual=True)
+    perleaf = S.tree_shared_compress_fused(
+        None, dW, dM, dV, ALPHA, scope,
+        value_dtype="bfloat16", with_residual=True, packed=False)
+    for name, a, b in zip(("sW", "sM", "sV", "err", "mask"),
+                          packed, perleaf):
+        _assert_tree_equal(a, b, f"{scope} {name}")
+
+
+@pytest.mark.parametrize("scope", ["per_tensor", "global"])
+def test_packed_masks_match_tree_topk_masks(scope):
+    """Packed tau selection is the same selection tree_topk_masks'
+    threshold-kernel path performs, leaf for leaf."""
+    dW, dM, dV = _trees(20)
+    *_, mask_tree = S.tree_shared_compress_packed(
+        None, dW, dM, dV, ALPHA, scope)
+    composed = S.tree_topk_masks(dW, ALPHA, scope, exact=False,
+                                 backend="kernel")
+    _assert_tree_equal(mask_tree, composed, f"{scope} mask")
+
+
+def test_packed_with_score_tree():
+    """Non-ssm_w rules stream a separate score tensor; masks must follow
+    the score, values the deltas."""
+    dW, dM, dV = _trees(30)
+    score = {k: jnp.abs(v) for k, v in dM.items()}      # ssm_m rule
+    sW, sM, sV, err, mask = S.tree_shared_compress_packed(
+        score, dW, dM, dV, ALPHA, "per_tensor", with_residual=True)
+    composed = S.tree_topk_masks(score, ALPHA, "per_tensor", exact=False,
+                                 backend="kernel")
+    _assert_tree_equal(mask, composed, "score-tree mask")
+    _assert_tree_equal(sW, S.tree_sparsify(dW, mask), "score-tree sW")
+    _assert_tree_equal(
+        err, jax.tree.map(lambda w, s: w - s, dW, sW), "score-tree err")
+
+
+def test_packed_independent_matches_composed():
+    dW, dM, dV = _trees(40)
+    sW, sM, sV, err, (mW, mM, mV) = S.tree_independent_compress_packed(
+        dW, dM, dV, ALPHA, "per_tensor", with_residual=True)
+    cW, cM, cV = M.independent_masks(dW, dM, dV, ALPHA, "per_tensor",
+                                     exact=False, backend="kernel")
+    _assert_tree_equal(mW, cW, "independent mW")
+    _assert_tree_equal(mM, cM, "independent mM")
+    _assert_tree_equal(mV, cV, "independent mV")
+    _assert_tree_equal(sW, S.tree_sparsify(dW, cW), "independent sW")
+    _assert_tree_equal(sM, S.tree_sparsify(dM, cM), "independent sM")
+    _assert_tree_equal(sV, S.tree_sparsify(dV, cV), "independent sV")
+    _assert_tree_equal(
+        err, jax.tree.map(lambda w, s: w - s, dW, sW), "independent err")
+
+
+def test_packed_degenerate_alpha_keeps_everything():
+    dW, dM, dV = _trees(50)
+    sW, sM, sV, err, mask = S.tree_shared_compress_packed(
+        None, dW, dM, dV, 1.0, "per_tensor", with_residual=True)
+    _assert_tree_equal(sW, dW, "alpha=1 sW")
+    _assert_tree_equal(sM, dM, "alpha=1 sM")
+    _assert_tree_equal(sV, dV, "alpha=1 sV")
+    for leaf in jax.tree_util.tree_leaves(err):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+
+
+def test_fused_mixed_dtype_falls_back_to_perleaf():
+    """Mixed-dtype trees can't share one packed buffer; the packed=True
+    default must quietly take the per-leaf loop and still be correct."""
+    dW, dM, dV = _trees(60, shapes=[(2000,), (8, 1024)])
+    dW["l0"] = dW["l0"].astype(jnp.bfloat16)
+    out = S.tree_shared_compress_fused(None, dW, dM, dV, ALPHA,
+                                       "per_tensor", with_residual=True)
+    ref = S.tree_shared_compress_fused(None, dW, dM, dV, ALPHA,
+                                       "per_tensor", with_residual=True,
+                                       packed=False)
+    for a, b in zip(out, ref):
+        _assert_tree_equal(a, b, "mixed-dtype fallback")
+
+
+def test_independent_compressor_packed_path_matches_composed():
+    """Compressor-level: the kernel backend's packed payload equals the
+    composed kernel-path masks applied to the deltas (the reference
+    backend's bisection tau differs by construction, so the comparison
+    target is the composed KERNEL mask path)."""
+    dW, dM, dV = _trees(70, shapes=[(9001,), (37,), (8, 1024)])
+    deltas = Deltas(dW, dM, dV)
+    comp = IndependentTopKCompressor(
+        alpha=ALPHA, exact_topk=False, error_feedback=True,
+        sparsify_backend="kernel")
+    packed, state, _ = comp.compress(deltas, comp.init_state(deltas.W))
+    cW, cM, cV = M.independent_masks(dW, dM, dV, ALPHA, "per_tensor",
+                                     exact=False, backend="kernel")
+    _assert_tree_equal(packed.W, S.tree_sparsify(dW, cW),
+                       "independent compressor W")
+    _assert_tree_equal(packed.M, S.tree_sparsify(dM, cM),
+                       "independent compressor M")
+    _assert_tree_equal(packed.V, S.tree_sparsify(dV, cV),
+                       "independent compressor V")
+    _assert_tree_equal(
+        state["err"], jax.tree.map(lambda w, s: w - s, dW, packed.W),
+        "independent compressor err")
+
+
+@pytest.mark.parametrize("cname", ["whisper-base", "starcoder2-3b"])
+def test_packed_smoke_pytree_bit_exact(monkeypatch, cname):
+    """Acceptance gate on real model pytrees (smoke shapes): the packed
+    pipeline is bit-identical to the per-leaf fused path AND costs at
+    most two Pallas launches for the whole model."""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import abstract_params, params as PM
+    cfg = reduce_for_smoke(get_config(cname))
+    sds = PM.abstract(abstract_params(cfg), "float32")
+    leaves, treedef = jax.tree_util.tree_flatten(sds)
+    keys = jax.random.split(jax.random.PRNGKey(0),
+                            3 * len(leaves)).reshape(3, len(leaves), 2)
+    mk = lambda row, s: jax.tree_util.tree_unflatten(
+        treedef, [jax.random.normal(k, l.shape, jnp.float32) * s
+                  for k, l in zip(row, leaves)])
+    dW, dM = mk(keys[0], 1.0), mk(keys[1], 0.1)
+    dV = jax.tree.map(jnp.abs, mk(keys[2], 0.01))
+
+    counter = _count_pallas_calls(monkeypatch)
+    jax.clear_caches()
+    counter["n"] = 0
+    packed = S.tree_shared_compress_packed(
+        None, dW, dM, dV, ALPHA, "per_tensor",
+        value_dtype="bfloat16", with_residual=True)
+    jax.block_until_ready(packed[0])
+    assert counter["n"] <= 2, f"{cname}: {counter['n']} launches"
+
+    perleaf = S.tree_shared_compress_fused(
+        None, dW, dM, dV, ALPHA, "per_tensor",
+        value_dtype="bfloat16", with_residual=True, packed=False)
+    for name, a, b in zip(("sW", "sM", "sV", "err", "mask"),
+                          packed, perleaf):
+        _assert_tree_equal(a, b, f"{cname} {name}")
+
+
+# --- launch accounting ----------------------------------------------------
+
+
+def _count_pallas_calls(monkeypatch):
+    """Spy on pl.pallas_call at its definition module: every kernel
+    module does ``from jax.experimental import pallas as pl`` and calls
+    ``pl.pallas_call(...)`` through the module attribute, so patching
+    the attribute intercepts every launch construction.
+
+    Counts happen at TRACE time, so callers must ``jax.clear_caches()``
+    immediately before the measured call — a jit cache hit replays the
+    compiled executable without re-entering pallas_call.  For the same
+    reason the count is a FLOOR on runtime launches: two same-shape
+    launches inside one fresh trace region count once (e.g. the
+    per-leaf selection's two count passes share one count_ge trace)."""
+    import jax.experimental.pallas as pl_mod
+    real = pl_mod.pallas_call
+    counter = {"n": 0}
+
+    def spy(*args, **kwargs):
+        counter["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pl_mod, "pallas_call", spy)
+    return counter
+
+
+def _launch_shapes(n_leaves):
+    # one extra 8192-element tile per leaf, so every leaf pads to a
+    # DIFFERENT 2D shape and the per-leaf path can't share traces
+    # across leaves; all >= 8192 so its apply stage also runs as a
+    # kernel (it falls back to jnp below 8192 elements)
+    return [(8192 * (i + 1) + 1,) for i in range(n_leaves)]
+
+
+def test_packed_compress_is_two_launches(monkeypatch):
+    """The headline contract: a >= 10-leaf pytree compresses in at most
+    TWO Pallas launches on the packed path, vs >= 3 per leaf on the old
+    per-leaf path (recorded here as the regression baseline; the true
+    per-leaf runtime count is 4/leaf — trace-level counting merges the
+    two same-shape count passes)."""
+    counter = _count_pallas_calls(monkeypatch)
+    shapes = _launch_shapes(12)
+    dW, dM, dV = _trees(80, shapes=shapes)
+    L = len(shapes)
+
+    jax.clear_caches()
+    counter["n"] = 0
+    S.tree_shared_compress_packed(None, dW, dM, dV, ALPHA, "per_tensor",
+                                  with_residual=True)
+    packed_launches = counter["n"]
+    assert packed_launches <= 2, \
+        f"packed path used {packed_launches} launches (contract: <= 2)"
+
+    jax.clear_caches()
+    counter["n"] = 0
+    S.tree_shared_compress_fused(None, dW, dM, dV, ALPHA, "per_tensor",
+                                 with_residual=True, packed=False)
+    perleaf_launches = counter["n"]
+    assert perleaf_launches >= 3 * L, \
+        f"per-leaf baseline launched {perleaf_launches} (< 3/leaf?)"
+    assert packed_launches < perleaf_launches
+
+
+def test_packed_global_scope_is_two_launches(monkeypatch):
+    counter = _count_pallas_calls(monkeypatch)
+    dW, dM, dV = _trees(90, shapes=_launch_shapes(10))
+    jax.clear_caches()
+    counter["n"] = 0
+    S.tree_shared_compress_packed(None, dW, dM, dV, ALPHA, "global",
+                                  with_residual=True)
+    assert counter["n"] <= 2
+
+
+def test_packed_independent_is_two_launches(monkeypatch):
+    """Three independent masks (3L tau segments) still cost the same
+    two launches — the packing, not the mask count, sets the cost."""
+    counter = _count_pallas_calls(monkeypatch)
+    dW, dM, dV = _trees(100, shapes=_launch_shapes(10))
+    jax.clear_caches()
+    counter["n"] = 0
+    S.tree_independent_compress_packed(dW, dM, dV, ALPHA, "per_tensor",
+                                      with_residual=True)
+    assert counter["n"] <= 2
