@@ -1,0 +1,157 @@
+"""jax version-compatibility shims for the mesh surface.
+
+The production drivers target the jax >= 0.6 top-level API:
+``jax.shard_map`` (mesh inferred from context, ``axis_names`` selects the
+MANUAL axes, ``check_vma``) and the ``jax.set_mesh`` context.  The pinned
+container jax (0.4.37) predates both — it only has
+``jax.experimental.shard_map.shard_map`` (explicit mesh, ``auto`` is the
+complement of the manual set, ``check_rep``) and rejects bare
+``PartitionSpec`` trees in ``jit`` shardings.
+
+Every mesh entry point in this repo goes through this module so the same
+source runs on both APIs:
+
+* :func:`shard_map`   — new-style signature, translated for old jax.
+* :func:`set_mesh`    — ``jax.set_mesh`` when present, else a context
+  manager that records the mesh (for :func:`active_mesh`) and enters the
+  legacy ``Mesh`` context.
+* :func:`jit`         — ``jax.jit`` with ``in_shardings``/``out_shardings``
+  given as ``PartitionSpec`` pytrees; on old jax the specs are resolved
+  against the active mesh into ``NamedSharding`` first.
+
+One behavioural shim rides along: 0.4.x GSPMD hard-crashes
+(``Check failed: sharding.IsManualSubgroup()``) lowering a ``lax.scan``
+that consumes a scanned-over operand inside a *partial-auto* shard_map
+region — the exact shape of ``round_shardmap``'s MANUAL-over-clients /
+auto-over-model body around the transformer's stacked-layer scan.  The
+shardy partitioner lowers it correctly, so :func:`set_mesh` flips
+``jax_use_shardy_partitioner`` on when it activates a multi-axis mesh on
+old jax.  Opt out with ``REPRO_PARTITIONER=gspmd`` (single-axis client
+meshes never have auto axes and keep the default partitioner).
+
+See docs/ARCHITECTURE.md §"Mesh compat" and tests/test_mesh_integration.py
+(which exercises both drivers through these shims on whatever jax is
+installed).
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+#: True when the installed jax exposes the >= 0.6 top-level mesh API.
+HAS_NEW_MESH_API = hasattr(jax, "shard_map") and hasattr(jax, "set_mesh")
+
+_local = threading.local()
+
+
+def _mesh_stack():
+    if not hasattr(_local, "meshes"):
+        _local.meshes = []
+    return _local.meshes
+
+
+def active_mesh() -> Optional[Mesh]:
+    """The innermost mesh entered via :func:`set_mesh` (old-jax path).
+    ``None`` when no compat mesh context is active."""
+    stack = _mesh_stack()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def _compat_set_mesh(mesh: Mesh):
+    _mesh_stack().append(mesh)
+    try:
+        # the legacy global-mesh context: harmless, and lets library code
+        # that consults the pre-0.6 thread-resources mesh agree with us
+        with mesh:
+            yield mesh
+    finally:
+        _mesh_stack().pop()
+
+
+def _maybe_enable_shardy(mesh: Mesh) -> None:
+    """Old-jax GSPMD cannot lower scan-over-stacked-operands inside a
+    partial-auto shard_map region (XLA ``IsManualSubgroup`` check
+    failure, regardless of operand sharding); shardy can.  Partial-auto
+    only arises on meshes with axes beyond the client axes, so flip the
+    partitioner exactly then.  ``REPRO_PARTITIONER=gspmd`` opts out."""
+    if len(mesh.axis_names) <= 1:
+        return
+    if os.environ.get("REPRO_PARTITIONER", "").lower() == "gspmd":
+        return
+    if not jax.config.jax_use_shardy_partitioner:
+        jax.config.update("jax_use_shardy_partitioner", True)
+
+
+def set_mesh(mesh: Mesh):
+    """``jax.set_mesh(mesh)`` on new jax; a stand-in context manager on
+    old jax.  Always used as ``with set_mesh(mesh): ...``."""
+    if HAS_NEW_MESH_API:
+        return jax.set_mesh(mesh)
+    _maybe_enable_shardy(mesh)
+    return _compat_set_mesh(mesh)
+
+
+def shard_map(f, mesh: Optional[Mesh] = None, *, in_specs, out_specs,
+              axis_names=None, check_vma: bool = False):
+    """New-style ``jax.shard_map`` signature on any jax.
+
+    ``axis_names`` is the set of mesh axes the body is MANUAL over
+    (``None`` = all of them); on old jax it is translated into the
+    complementary ``auto`` set and ``check_vma`` into ``check_rep``.
+    When ``mesh`` is omitted on old jax it is taken from the enclosing
+    :func:`set_mesh` context (new jax resolves the context itself).
+    """
+    if HAS_NEW_MESH_API:
+        kwargs: dict = dict(in_specs=in_specs, out_specs=out_specs,
+                            check_vma=check_vma)
+        if mesh is not None:
+            kwargs["mesh"] = mesh
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+    m = mesh if mesh is not None else active_mesh()
+    if m is None:
+        raise ValueError(
+            "compat.shard_map on jax %s needs a concrete mesh: pass mesh= "
+            "or enter repro.compat.set_mesh(mesh)" % jax.__version__)
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(m.axis_names) - frozenset(axis_names)
+    return _shard_map(f, m, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def _resolve_shardings(tree: Any, mesh: Mesh) -> Any:
+    """PartitionSpec leaves -> NamedSharding(mesh, spec); None and real
+    Shardings pass through (None subtrees mean "unconstrained", exactly
+    as on new jax)."""
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp)
+        if isinstance(sp, PartitionSpec) else sp,
+        tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def jit(fn, *, in_shardings=None, out_shardings=None, mesh=None, **kw):
+    """``jax.jit`` accepting ``PartitionSpec`` pytrees for the shardings
+    on any jax.  On new jax the specs pass straight through (resolved by
+    the ``jax.set_mesh`` context); on old jax they are resolved into
+    ``NamedSharding`` against ``mesh`` (default: the active compat
+    mesh) before ``jax.jit`` sees them."""
+    if not HAS_NEW_MESH_API:
+        m = mesh if mesh is not None else active_mesh()
+        if m is None:
+            raise ValueError(
+                "compat.jit needs a mesh for PartitionSpec shardings on "
+                "jax %s: pass mesh= or enter set_mesh" % jax.__version__)
+        in_shardings = _resolve_shardings(in_shardings, m)
+        out_shardings = _resolve_shardings(out_shardings, m)
+    return jax.jit(fn, in_shardings=in_shardings,
+                   out_shardings=out_shardings, **kw)

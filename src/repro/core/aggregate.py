@@ -56,6 +56,24 @@ def dense_weighted_sum(tree_c, weights):
                                 axes=(0, 0)), tree_c)
 
 
+def ordered_weighted_sum(tree_c, weights):
+    """Weighted sum over the leading client axis with ``round_scan``'s
+    exact accumulation order and arithmetic (``acc + w * x.astype(f32)``,
+    client 0 first), so the mesh driver's dense aggregation is
+    bit-identical to the scan reference (tests/test_fed_equivalence.py).
+    O(C) sequential adds — the reference/debug aggregation; the
+    production uplink is the sparse shard_map transport."""
+    zero = jax.tree.map(lambda x: jnp.zeros(x.shape[1:], _F32), tree_c)
+
+    def body(acc, xs):
+        x, w = xs
+        return jax.tree.map(
+            lambda a, y: a + w * y.astype(_F32), acc, x), 0.0
+
+    acc, _ = lax.scan(body, zero, (tree_c, weights))
+    return acc
+
+
 def _to_blocks(x_c, n):
     """(C, n) -> (C, nb, B) zero-padded; B per core/sparsify.BLOCK."""
     B = S.BLOCK
@@ -203,11 +221,25 @@ def _gathered_scatter(vals_g, idx_g, valid_g, weights, n_loc):
 def make_shardmap_sparse_aggregate(mesh, param_pspecs, client_axes, alpha,
                                    *, shared: bool = True,
                                    value_dtype=None):
-    """Build ``agg(sW_c, sM_c, sV_c, weights) -> (aW, aM, aV)`` (weighted
-    SUMS) running under shard_map.  param_pspecs: pytree of PartitionSpec
-    for the *unstacked* params; the client-stacked inputs get
-    P(client_axes, *param_spec)."""
-    from jax import shard_map
+    """Build the shard_map sparse-transport aggregation::
+
+        agg(sW_c, sM_c, sV_c, weights)           -> (aW, aM, aV)
+        agg(sW_c, sM_c, sV_c, weights, comp_err) -> (aW, aM, aV), new_err
+
+    (weighted SUMS).  param_pspecs: pytree of PartitionSpec for the
+    *unstacked* params; the client-stacked inputs get
+    P(client_axes, *param_spec).
+
+    ``comp_err`` (optional) is the per-shard error-feedback residual tree
+    on dW (client-stacked, same treedef as the params), as carried by the
+    shard_map round driver under ``client_state["comp"]["err"]``.  When
+    given, values the fixed-capacity pack DROPS from the wire (capacity =
+    k + overselect_bound(k) per device shard; overflow beyond it never
+    reaches the server) are added back into the residual, so transport
+    drop obeys the same error-feedback semantics as mask drop instead of
+    silently vanishing.  When nothing overflows the residual is returned
+    bit-unchanged."""
+    from repro.compat import shard_map
 
     caxes = tuple(client_axes)
     cax_entry = caxes if len(caxes) > 1 else caxes[0]
@@ -219,12 +251,14 @@ def make_shardmap_sparse_aggregate(mesh, param_pspecs, client_axes, alpha,
     wspec = PartitionSpec(None)
     vdt = jnp.dtype(value_dtype) if value_dtype else None
 
-    def body(w_tree, m_tree, v_tree, weights):
+    def body(w_tree, m_tree, v_tree, weights, err_tree):
         lw = jax.tree_util.tree_leaves(w_tree)
         lm = jax.tree_util.tree_leaves(m_tree)
         lv = jax.tree_util.tree_leaves(v_tree)
-        outs_w, outs_m, outs_v = [], [], []
-        for w, m, v in zip(lw, lm, lv):
+        lerr = jax.tree_util.tree_leaves(err_tree)
+        has_err = len(lerr) > 0    # list emptiness: static at trace time
+        outs_w, outs_m, outs_v, outs_err = [], [], [], []
+        for i, (w, m, v) in enumerate(zip(lw, lm, lv)):
             c_loc = w.shape[0]
             assert c_loc == 1, "one spatial client per device row"
             shape_loc = w.shape[1:]
@@ -240,6 +274,18 @@ def make_shardmap_sparse_aggregate(mesh, param_pspecs, client_axes, alpha,
                 vals_w = vals_w.astype(vdt)
                 vals_m = vals_m.astype(vdt)
                 vals_v = vals_v.astype(vdt)
+            if has_err:
+                # what the server actually receives for this client: the
+                # (possibly wire-cast) packed values scattered back; the
+                # capacity-overflow remainder feeds the EF residual
+                kept = jnp.zeros((n_loc,), _F32).at[idx].add(
+                    jnp.where(valid, vals_w.astype(_F32), 0.0))
+                err = lerr[i].reshape(n_loc)
+                # drop first, then add: when nothing overflows the drop is
+                # exactly 0.0 and the residual passes through bitwise
+                drop = wf.astype(_F32) - kept
+                new_err = (err.astype(_F32) + drop).astype(err.dtype)
+                outs_err.append(new_err.reshape(lerr[i].shape))
             # THE UPLINK: all-gather packed representation over client axes
             gather = lambda t: _gather_clients(t, caxes)
             vw_g, idx_g, valid_g = gather(vals_w), gather(idx), gather(valid)
@@ -262,15 +308,25 @@ def make_shardmap_sparse_aggregate(mesh, param_pspecs, client_axes, alpha,
                         n_loc).reshape(shape_loc))
         unf = lambda leaves: jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(w_tree), leaves)
-        return unf(outs_w), unf(outs_m), unf(outs_v)
+        new_err_tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(err_tree), outs_err) \
+            if has_err else None
+        return unf(outs_w), unf(outs_m), unf(outs_v), new_err_tree
 
-    def agg(sW_c, sM_c, sV_c, weights):
-        return shard_map(
+    def agg(sW_c, sM_c, sV_c, weights, comp_err=None):
+        has_err = comp_err is not None
+        err_spec = stacked_spec if has_err else None
+        aW, aM, aV, new_err = shard_map(
             body, mesh=mesh,
-            in_specs=(stacked_spec, stacked_spec, stacked_spec, wspec),
-            out_specs=(param_pspecs, param_pspecs, param_pspecs),
+            in_specs=(stacked_spec, stacked_spec, stacked_spec, wspec,
+                      err_spec),
+            out_specs=(param_pspecs, param_pspecs, param_pspecs,
+                       err_spec),
             check_vma=False,
-        )(sW_c, sM_c, sV_c, weights)
+        )(sW_c, sM_c, sV_c, weights, comp_err)
+        if has_err:
+            return (aW, aM, aV), new_err
+        return aW, aM, aV
 
     return agg
 

@@ -141,6 +141,40 @@ def fed_init(fed: FedConfig, params) -> FedState:
                     client_state=parts or None)
 
 
+def client_state_pspecs(client_state, param_pspecs, client_axes):
+    """PartitionSpec pytree for a client-stacked ``client_state`` tree.
+
+    Every leaf gets its leading client axis placed on ``client_axes``
+    (``None`` for the scan driver's virtual-client axis, which no mesh
+    axis carries).  Trailing dims follow the *param* sharding whenever a
+    sub-tree mirrors the params treedef — which is exactly how fed_init
+    builds the EF residuals (``{"comp": {"err": params-like}}``) and the
+    ``local_adam`` moments (``"m"``/``"v"``) — so at the jit boundary a
+    client's residual shard is laid out like its param shard, not
+    replicated across the model axes.  Unrecognized sub-trees (custom
+    compressor state) fall back to client-axis-only placement.
+    """
+    if client_state is None:
+        return None
+    cax = (tuple(client_axes) if len(client_axes) > 1 else client_axes[0]) \
+        if client_axes else None
+    pleaves, ptreedef = jax.tree_util.tree_flatten(
+        param_pspecs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+    def spec_for(sub):
+        try:
+            ptreedef.flatten_up_to(sub)
+        except (ValueError, TypeError):
+            if isinstance(sub, dict):
+                return {k: spec_for(v) for k, v in sub.items()}
+            return jax.tree.map(
+                lambda x: PartitionSpec(cax, *([None] * (x.ndim - 1))), sub)
+        return ptreedef.unflatten(
+            [PartitionSpec(cax, *sp) for sp in pleaves])
+
+    return spec_for(client_state)
+
+
 # ---------------------------------------------------------------------------
 # Local training
 # ---------------------------------------------------------------------------
@@ -213,15 +247,6 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
     """
     comp = compressors.make_compressor(fed)
     n_active = active_client_count(fed)
-    if fed.client_mode != "scan" and fed.client_axes is not None:
-        # the shard_map spatial driver does not thread per-client state
-        # (round_shardmap passes cstate=None); fail fast rather than
-        # silently dropping error-feedback residuals at trace time
-        if comp.init_state({"_": jnp.zeros((1,), _F32)}) is not None:
-            raise NotImplementedError(
-                f"compressor {comp.name!r} carries per-client state, which "
-                "the shard_map spatial driver does not thread; use "
-                "client_mode='scan', or vmap without client_axes")
 
     def client_step(W, M, V, batch, cstate):
         """One client's round: local epochs + compression.
@@ -297,43 +322,71 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
         region runs under shard_map MANUAL over the client mesh axes (auto
         over "model"), so divergent client replicas are structurally
         per-device — GSPMD cannot replicate them (the pure-vmap formulation
-        showed 10-100x memory blow-ups at scale).  Aggregation then runs in
-        the global view (dense) or via the injected shard_map transport."""
-        from jax import shard_map
+        showed 10-100x memory blow-ups at scale).  Per-client compressor
+        state (EF residuals under ``client_state["comp"]``, plus the
+        ``local_adam`` persistent moments) enters the MANUAL region sharded
+        over the same client axes, is consumed/produced by ``client_step``
+        exactly as under scan/vmap, and leaves the region still sharded —
+        it never materializes unsharded.  Aggregation then runs in the
+        global view (dense) or via the injected shard_map transport."""
+        from repro.compat import shard_map
 
         W, M, V = state.W, state.M, state.V
+        cs = state.client_state
+        has_cs = cs is not None
         caxes = tuple(fed.client_axes)
         cax = caxes if len(caxes) > 1 else caxes[0]
 
-        def body(Wb, Mb, Vb, batch, wts):
+        def body(Wb, Mb, Vb, batch, wts, cstate):
             batch_l = jax.tree.map(lambda x: x[0], batch)
-            sW, sM, sV, _, mets = client_step(Wb, Mb, Vb, batch_l, None)
+            # one spatial client per device row: peel the client axis off
+            # the state shard, thread it through the step, put it back
+            cstate_l = jax.tree.map(lambda x: x[0], cstate)
+            sW, sM, sV, ncs, mets = client_step(Wb, Mb, Vb, batch_l,
+                                                cstate_l)
             lead = lambda t: jax.tree.map(lambda x: x[None], t)
             mets = jax.tree.map(lambda x: x[None], mets)
-            return lead(sW), lead(sM), lead(sV), mets
+            return lead(sW), lead(sM), lead(sV), lead(ncs), mets
 
         rep = lambda tree: jax.tree.map(lambda _: PartitionSpec(), tree)
         stk = lambda tree: jax.tree.map(
             lambda x: PartitionSpec(cax, *([None] * (x.ndim - 1))), tree)
         mets_spec = {k: PartitionSpec(cax)
                      for k in list(DIAG_KEYS) + ["loss"]}
-        sW, sM, sV, mets = shard_map(
+        # cs=None is an empty pytree: its spec entry is None and the body's
+        # tree.maps over it are no-ops, so the stateless path is unchanged
+        sW, sM, sV, new_cs, mets = shard_map(
             body,
             in_specs=(rep(W), rep(M), rep(V), stk(batches),
-                      PartitionSpec(None)),
-            out_specs=(stk(W), stk(W), stk(W), mets_spec),
+                      PartitionSpec(None), stk(cs)),
+            out_specs=(stk(W), stk(W), stk(W), stk(cs), mets_spec),
             axis_names=frozenset(caxes),
             check_vma=False,
-        )(W, M, V, batches, weights)
+        )(W, M, V, batches, weights, cs)
 
         wsum = jnp.sum(weights.astype(_F32))
         if fed.aggregate == "sparse_gather" and sparse_aggregate_fn is not None:
-            aW, aM, aV = sparse_aggregate_fn(sW, sM, sV, weights)
+            # EF compressors: hand the transport the per-shard residuals so
+            # values dropped by the pack's fixed capacity feed back into
+            # next round's input instead of vanishing on the wire
+            comp_err = new_cs["comp"].get("err") \
+                if has_cs and isinstance(new_cs.get("comp"), dict) else None
+            if comp_err is not None and comp.transport in (
+                    "shared_sparse", "independent_sparse"):
+                (aW, aM, aV), new_err = sparse_aggregate_fn(
+                    sW, sM, sV, weights, comp_err)
+                new_cs = dict(new_cs, comp=dict(new_cs["comp"],
+                                                err=new_err))
+            else:
+                aW, aM, aV = sparse_aggregate_fn(sW, sM, sV, weights)
         else:
-            aW = aggregate.dense_weighted_sum(sW, weights)
-            aM = aggregate.dense_weighted_sum(sM, weights)
-            aV = aggregate.dense_weighted_sum(sV, weights)
-        return (aW, aM, aV), wsum, None, mets
+            # ordered (scan-identical) accumulation: the dense branch of
+            # the mesh driver is the reference/debug path — bit-identical
+            # to round_scan by construction (tests/test_fed_equivalence)
+            aW = aggregate.ordered_weighted_sum(sW, weights)
+            aM = aggregate.ordered_weighted_sum(sM, weights)
+            aV = aggregate.ordered_weighted_sum(sV, weights)
+        return (aW, aM, aV), wsum, (new_cs if has_cs else None), mets
 
     def round_vmap(state: FedState, batches, weights):
         W, M, V = state.W, state.M, state.V

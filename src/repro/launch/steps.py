@@ -18,7 +18,9 @@ from jax.sharding import PartitionSpec as P
 from repro import sharding as shd
 from repro.configs.base import ArchConfig
 from repro.core.compressors import transport_of
-from repro.core.fed import FedConfig, FedState, make_fl_round
+from repro.core.fed import (
+    FedConfig, FedState, client_state_pspecs, fed_init, make_fl_round,
+)
 from repro.models import model as M
 from repro.models import params as PM
 from repro.optim.adam import AdamHyper
@@ -105,6 +107,7 @@ def build_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
                      aggregate: Optional[str] = None,
                      plan: Optional[shd.DeployPlan] = None,
                      lr: float = 1e-3,
+                     error_feedback: bool = False,
                      sparsify_backend: str = "auto") -> StepBundle:
     multi_pod = "pod" in mesh.shape
     plan = plan or shd.plan_for(cfg.name)
@@ -143,6 +146,7 @@ def build_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
         # kernels; sort-based exact top-k is the small-model/test path
         exact_topk=False, mask_scope="per_tensor",
         sparsify_backend=sparsify_backend,
+        error_feedback=error_feedback,
         client_axes=(caxes if client_mode == "vmap" else None))
 
     n_front = _front_len(cfg, shape.seq_len)
@@ -172,10 +176,17 @@ def build_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
     def train_step(state, batch):
         return round_fn(state, batch)
 
-    state_sds = FedState(W=psds, M=psds, V=psds,
-                         round=_sds((), jnp.int32), client_state=None)
+    # shape-only fed_init: stateful compressors (EF residuals, local_adam
+    # moments) populate client_state with (C, *param)-shaped leaves; the
+    # spec pins the client axis to the mesh client axes (spatial) or
+    # leaves the virtual-client axis unsharded (scan), trailing dims
+    # following the param sharding (core/fed.client_state_pspecs)
+    state_sds = jax.eval_shape(lambda p: fed_init(fed, p), psds)
+    cs_spec = client_state_pspecs(
+        state_sds.client_state, pspec,
+        caxes if client_mode == "vmap" else None)
     state_spec = FedState(W=pspec, M=pspec, V=pspec, round=P(),
-                          client_state=None)
+                          client_state=cs_spec)
 
     batch_sds = {"tokens": _sds(batch_lead + (text_len,), jnp.int32)}
     batch_spec = {"tokens": tok_spec}

@@ -50,6 +50,76 @@ def test_shared_pack_uses_w_support():
                                np.asarray(dv_m.sum(0)), atol=1e-5)
 
 
+def _one_device_agg(alpha, shared=True):
+    """make_shardmap_sparse_aggregate on a trivial 1-device client mesh —
+    the transport arithmetic (pack, gather, scatter, EF overflow
+    feedback) is mesh-size independent, so it unit-tests in-process."""
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    pspec = {"x": P()}
+    agg = A.make_shardmap_sparse_aggregate(mesh, pspec, ("data",), alpha,
+                                           shared=shared)
+    return agg
+
+
+def test_shardmap_aggregate_matches_reference_transport():
+    """1-client shard_map transport == the jnp gather/scatter reference."""
+    C, n, alpha = 1, 128, 0.25
+    dw = _masked(jax.random.PRNGKey(7), C, n, alpha)
+    dm = jnp.where(dw != 0, jax.random.normal(jax.random.PRNGKey(8),
+                                              (C, n)), 0.0)
+    w = jnp.ones((C,))
+    agg = _one_device_agg(alpha)
+    aw, am, av = agg({"x": dw}, {"x": dm}, {"x": dm}, w)
+    np.testing.assert_allclose(np.asarray(aw["x"]), np.asarray(dw.sum(0)),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(am["x"]), np.asarray(dm.sum(0)),
+                               atol=1e-6)
+
+
+def test_shardmap_aggregate_ef_overflow_feedback():
+    """With per-shard EF state, values the fixed-capacity pack drops from
+    the wire are added back into the residual; without overflow the
+    residual passes through bit-unchanged."""
+    n, alpha = 64, 0.25
+    k = S.k_for(n, alpha)
+    from repro.kernels.topk_mask.ops import overselect_bound
+    kb = min(n, k + overselect_bound(k))           # pack capacity
+    assert kb < n // 2
+    # MORE nonzeros than capacity: positions 0..2kb-1 hold distinct values
+    wf = jnp.zeros((n,)).at[jnp.arange(2 * kb)].set(
+        jnp.arange(1.0, 2 * kb + 1))
+    dw = wf[None]                                  # (C=1, n)
+    err0 = jax.random.normal(jax.random.PRNGKey(9), (1, n))
+    w = jnp.ones((1,))
+    agg = _one_device_agg(alpha)
+    (aw, am, av), err1 = agg({"x": dw}, {"x": dw}, {"x": dw}, w,
+                             {"x": err0})
+    # kept on the wire: the first kb nonzeros (prefix-sum pack order)
+    kept = jnp.zeros((n,)).at[jnp.arange(kb)].set(wf[:kb])
+    np.testing.assert_allclose(np.asarray(aw["x"]), np.asarray(kept),
+                               atol=1e-6)
+    # residual gains exactly the dropped overflow
+    np.testing.assert_allclose(np.asarray(err1["x"]),
+                               np.asarray(err0 + (wf - kept)[None]),
+                               atol=1e-6)
+
+    # no overflow -> residual is returned bitwise unchanged
+    few = jnp.zeros((n,)).at[jnp.arange(k // 2)].set(1.0)[None]
+    (_, _, _), err2 = agg({"x": few}, {"x": few}, {"x": few}, w,
+                          {"x": err0})
+    assert bool((err2["x"] == err0).all())
+
+
+def test_ordered_weighted_sum_matches_dense():
+    C, n = 6, 257
+    x = jax.random.normal(jax.random.PRNGKey(10), (C, n))
+    w = jnp.asarray([1.0, 0.0, 2.0, 0.5, 1.0, 3.0])
+    np.testing.assert_allclose(
+        np.asarray(A.ordered_weighted_sum({"x": x}, w)["x"]),
+        np.asarray(A.dense_weighted_sum({"x": x}, w)["x"]), atol=1e-5)
+
+
 def test_sign_quant_preserves_block_l1():
     x = jax.random.normal(jax.random.PRNGKey(4), (4096,))
     q = Q.sign_quant(x, block=512)

@@ -1,4 +1,6 @@
 """Core FL-round behaviour: paper-exactness properties + convergence."""
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -136,6 +138,41 @@ def test_error_feedback_accumulates():
     diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
                zip(jax.tree.leaves(st_ef.W), jax.tree.leaves(st_no.W)))
     assert diff > 1e-7  # EF actually did something
+
+
+@pytest.mark.parametrize("mode", ["scan", "shardmap"])
+def test_ef_residual_is_carried_not_rezeroed(mode):
+    """The round-2 payload must actually SEE round 1's residual: zeroing
+    the carried residual between rounds changes the round-2 outcome, on
+    the scan reference and on the shard_map mesh driver alike."""
+    from repro import compat
+
+    params, batches, loss_fn, C = _toy()
+    if mode == "shardmap":
+        C = 1
+        batches = jax.tree.map(lambda x: x[:1], batches)
+    fed = FedConfig(algorithm="fedadam_ssm", alpha=0.1, local_epochs=2,
+                    n_clients=C, adam=AdamHyper(lr=0.05),
+                    error_feedback=True,
+                    client_mode=("scan" if mode == "scan" else "vmap"),
+                    client_axes=(("data",) if mode == "shardmap"
+                                 else None))
+    rf = jax.jit(make_fl_round(fed, loss_fn))
+    ctx = compat.set_mesh(jax.make_mesh((1,), ("data",))) \
+        if mode == "shardmap" else contextlib.nullcontext()
+    with ctx:
+        st1, _ = rf(fed_init(fed, params), batches)
+        err1 = st1.client_state["comp"]["err"]
+        assert max(float(jnp.max(jnp.abs(x)))
+                   for x in jax.tree.leaves(err1)) > 0
+        st2, _ = rf(st1, batches)
+        zeroed = st1._replace(client_state=dict(
+            st1.client_state,
+            comp={"err": jax.tree.map(jnp.zeros_like, err1)}))
+        st2z, _ = rf(zeroed, batches)
+    diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+               zip(jax.tree.leaves(st2.W), jax.tree.leaves(st2z.W)))
+    assert diff > 1e-7, "round-2 payload ignored the carried residual"
 
 
 def test_onebit_adam_with_warmup_converges():
