@@ -5,8 +5,17 @@ from repro.core.fed import (  # noqa: F401
     ALGORITHMS,
     FedConfig,
     FedState,
+    active_client_count,
     fed_init,
+    make_client_step,
     make_fl_round,
+    make_server_apply,
+)
+from repro.core.async_fed import (  # noqa: F401
+    AsyncConfig,
+    make_async_round,
+    staleness_scale,
+    staleness_weights,
 )
 from repro.core import comm, compressors, masks, quantize, sparsify  # noqa: F401
 from repro.core.compressors import (  # noqa: F401

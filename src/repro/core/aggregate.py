@@ -61,8 +61,12 @@ def ordered_weighted_sum(tree_c, weights):
     exact accumulation order and arithmetic (``acc + w * x.astype(f32)``,
     client 0 first), so the mesh driver's dense aggregation is
     bit-identical to the scan reference (tests/test_fed_equivalence.py).
-    O(C) sequential adds — the reference/debug aggregation; the
-    production uplink is the sparse shard_map transport."""
+    The buffered-async driver's server step (core/async_fed.py) runs
+    its K-update buffer through this same fold in arrival order, which
+    is what makes its zero-churn degenerate config bit-identical to the
+    sync round too.  O(C) sequential adds — the reference/debug
+    aggregation; the production uplink is the sparse shard_map
+    transport."""
     zero = jax.tree.map(lambda x: jnp.zeros(x.shape[1:], _F32), tree_c)
 
     def body(acc, xs):

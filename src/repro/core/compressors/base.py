@@ -21,6 +21,11 @@ shape first-class:
   :mod:`repro.core.fed`; ``bits`` is the exact per-client uplink cost of
   the payload (the Section IV/VII formulas of :mod:`repro.core.comm`),
   so the reported metric can never drift from the transport used.
+  Because ``state`` is the SOLE carrier of cross-round client memory,
+  the buffered-async driver (:mod:`repro.core.async_fed`) can give it
+  commit-on-accept semantics: a client whose update is lost or
+  discarded mid-flight keeps its residual bitwise intact and simply
+  retries from it — state is never rezeroed by churn (docs/async.md).
 
 Declarative dispatch tags (read by ``core/fed.py`` so that adding a
 compressor never requires editing the round):

@@ -107,7 +107,26 @@ def active_client_count(fed: FedConfig) -> int:
     never below one.  THE single site where the participation fraction
     meets host ``int()`` math — it runs at round-*build* time and its
     value is closed over by the jitted round body, so the cast can never
-    see a tracer (the jit-hazard lint rule guards the round body)."""
+    see a tracer (the jit-hazard lint rule guards the round body).
+
+    Invariant (relied on by every participation consumer):
+
+    * host-static ``int`` in ``[1, n_clients]`` — banker's rounding via
+      Python ``round`` (``participation=0.5, n_clients=5`` -> 2), and
+      ``participation=0.0`` still yields 1 (a round with zero clients
+      is never built);
+    * the SAME count drives both participation realizations: the sync
+      round samples exactly this many clients by *weight masking* (the
+      ``round_fn`` permutation below — compiled shapes stay static, an
+      inactive client contributes weight 0.0 and its bits are not
+      accounted), and the buffered-async driver
+      (:mod:`repro.core.async_fed`) restricts its *dispatch pool* to
+      this many clients, so sync and async agree on how many clients a
+      given ``participation`` admits.
+
+    Boundary behaviour is pinned by ``tests/test_fed.py::
+    test_active_client_count_boundaries``.
+    """
     return max(1, int(round(fed.participation * fed.n_clients)))
 
 
@@ -232,25 +251,22 @@ def _local_momentum(loss_fn, W, M, batch, fed: FedConfig):
 # ---------------------------------------------------------------------------
 
 
-def make_fl_round(fed: FedConfig, loss_fn: Callable,
-                  sparse_aggregate_fn: Optional[Callable] = None):
-    """Build ``round_fn(state, batches, weights=None) -> (state, metrics)``.
+def make_client_step(fed: FedConfig, loss_fn: Callable,
+                     comp: Optional[compressors.Compressor] = None):
+    """Build ONE client's round: local epochs + compression.
 
-    ``sparse_aggregate_fn(sW_c, sM_c, sV_c, weights) -> (aW, aM, aV)``:
-    optional shard_map-based transport (core.aggregate.
-    make_shardmap_sparse_aggregate) injected by the launcher; without it the
-    pure-jnp gather/scatter path is used (CPU tests, small models).
-
-    batches: pytree whose leaves have leading dims (C, [L,] ...) — client-
-    major (and epoch-major when per_epoch_batches).  weights: optional (C,)
-    FedAvg weights |D_n| (defaults to uniform).
-    """
-    comp = compressors.make_compressor(fed)
-    n_active = active_client_count(fed)
+    ``client_step(W, M, V, batch, cstate) ->
+    (sW, sM, sV, new_cstate, metrics)`` — the per-client unit of work
+    every driver shares: ``make_fl_round``'s scan/vmap/shard_map bodies
+    run it over the cohort, and the buffered-async driver
+    (:mod:`repro.core.async_fed`) runs it per dispatch against a stale
+    parameter snapshot.  Keeping this a single builder is what makes
+    sync <-> async degenerate-config equivalence *bitwise* rather than
+    approximate (tests/test_async_fed.py)."""
+    if comp is None:
+        comp = compressors.make_compressor(fed)
 
     def client_step(W, M, V, batch, cstate):
-        """One client's round: local epochs + compression.
-        Returns (sW, sM, sV, new_cstate, metrics)."""
         comp_state = cstate.get("comp") if cstate is not None else None
         extras = {}
 
@@ -288,6 +304,71 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
                 new_cstate["comp"] = new_comp_state
             new_cstate.update(extras)
         return sW, sM, sV, new_cstate, dict(packed.diag, loss=loss)
+
+    return client_step
+
+
+def make_server_apply(fed: FedConfig,
+                      comp: Optional[compressors.Compressor] = None):
+    """Build the server-side tail of a round: FedAvg mean + the
+    compressor's declarative ``server_update`` rule.
+
+    ``server_apply(W, M, V, aW, aM, aV, wsum) -> (W', M', V')`` where
+    ``(aW, aM, aV)`` are weighted SUMS over whatever cohort delivered
+    (full cohort in the sync round, the K-deep buffer in the async
+    driver) and ``wsum`` the matching weight total.  Shared verbatim by
+    ``make_fl_round`` and :mod:`repro.core.async_fed`, so the two
+    drivers can never disagree on the server arithmetic."""
+    if comp is None:
+        comp = compressors.make_compressor(fed)
+    h = fed.adam
+
+    def server_apply(W, M, V, aW, aM, aV, wsum):
+        mean = lambda t: jax.tree.map(lambda x: x / wsum, t)
+        aW, aM, aV = mean(aW), mean(aM), mean(aV)
+        if comp.server_update == "precond_m":
+            # 1-bit Adam: M advances by the aggregated momentum delta; W
+            # by the preconditioned step with frozen V.  (Warmup rounds
+            # run as a separate dense FedConfig — see the two-phase
+            # protocol in tests/test_fed.py.)
+            M_new = _tree_add(M, aM)
+            upd = jax.tree.map(
+                lambda mm, vv: (h.lr * mm.astype(_F32)
+                                / jnp.sqrt(vv.astype(_F32) + h.eps)),
+                M_new, V)
+            W_new = jax.tree.map(
+                lambda w, u: (w.astype(_F32) - u).astype(w.dtype),
+                W, upd)
+            V_new = V
+        elif comp.server_update == "w_only":
+            W_new = _tree_add(W, aW)
+            M_new, V_new = M, V
+        else:                             # "wmv": the FedAdam family
+            W_new = _tree_add(W, aW)
+            M_new = _tree_add(M, aM)
+            V_new = _tree_add(V, aV)
+        return W_new, M_new, V_new
+
+    return server_apply
+
+
+def make_fl_round(fed: FedConfig, loss_fn: Callable,
+                  sparse_aggregate_fn: Optional[Callable] = None):
+    """Build ``round_fn(state, batches, weights=None) -> (state, metrics)``.
+
+    ``sparse_aggregate_fn(sW_c, sM_c, sV_c, weights) -> (aW, aM, aV)``:
+    optional shard_map-based transport (core.aggregate.
+    make_shardmap_sparse_aggregate) injected by the launcher; without it the
+    pure-jnp gather/scatter path is used (CPU tests, small models).
+
+    batches: pytree whose leaves have leading dims (C, [L,] ...) — client-
+    major (and epoch-major when per_epoch_batches).  weights: optional (C,)
+    FedAvg weights |D_n| (defaults to uniform).
+    """
+    comp = compressors.make_compressor(fed)
+    n_active = active_client_count(fed)
+    client_step = make_client_step(fed, loss_fn, comp)
+    server_apply = make_server_apply(fed, comp)
 
     # -- round drivers --------------------------------------------------
 
@@ -446,31 +527,8 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
         else:
             driver = round_vmap
         (aW, aM, aV), wsum, new_cs, mets = driver(state, batches, weights)
-        mean = lambda t: jax.tree.map(lambda x: x / wsum, t)
-        aW, aM, aV = mean(aW), mean(aM), mean(aV)
-
-        h = fed.adam
-        if comp.server_update == "precond_m":
-            # 1-bit Adam: M advances by the aggregated momentum delta; W
-            # by the preconditioned step with frozen V.  (Warmup rounds
-            # run as a separate dense FedConfig — see the two-phase
-            # protocol in tests/test_fed.py.)
-            M_new = _tree_add(state.M, aM)
-            upd = jax.tree.map(
-                lambda mm, vv: (h.lr * mm.astype(_F32)
-                                / jnp.sqrt(vv.astype(_F32) + h.eps)),
-                M_new, state.V)
-            W_new = jax.tree.map(
-                lambda w, u: (w.astype(_F32) - u).astype(w.dtype),
-                state.W, upd)
-            V_new = state.V
-        elif comp.server_update == "w_only":
-            W_new = _tree_add(state.W, aW)
-            M_new, V_new = state.M, state.V
-        else:                             # "wmv": the FedAdam family
-            W_new = _tree_add(state.W, aW)
-            M_new = _tree_add(state.M, aM)
-            V_new = _tree_add(state.V, aV)
+        W_new, M_new, V_new = server_apply(state.W, state.M, state.V,
+                                           aW, aM, aV, wsum)
 
         # uplink accounting: the compressor's own bits report (Section IV
         # / VII formulas in core/comm.py) x participating clients — the

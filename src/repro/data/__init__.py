@@ -3,6 +3,11 @@ from repro.data.federated import (  # noqa: F401
     iid_partition,
     client_batches,
 )
+from repro.data.churn import (  # noqa: F401
+    ChurnConfig,
+    ChurnModel,
+    ClientFate,
+)
 from repro.data.synthetic import (  # noqa: F401
     synthetic_image_dataset,
     synthetic_tokens,

@@ -108,7 +108,8 @@ def build_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
                      plan: Optional[shd.DeployPlan] = None,
                      lr: float = 1e-3,
                      error_feedback: bool = False,
-                     sparsify_backend: str = "auto") -> StepBundle:
+                     sparsify_backend: str = "auto",
+                     participation: float = 1.0) -> StepBundle:
     multi_pod = "pod" in mesh.shape
     plan = plan or shd.plan_for(cfg.name)
     caxes = shd.client_axes(multi_pod)
@@ -147,6 +148,9 @@ def build_train_step(cfg: ArchConfig, mesh, shape: ShapeSpec, *,
         exact_topk=False, mask_scope="per_tensor",
         sparsify_backend=sparsify_backend,
         error_feedback=error_feedback,
+        # partial participation: fed.active_client_count drives both the
+        # sync weight-masked sampling here and the async dispatch pool
+        participation=participation,
         client_axes=(caxes if client_mode == "vmap" else None))
 
     n_front = _front_len(cfg, shape.seq_len)

@@ -71,6 +71,20 @@ def main() -> None:
                     choices=("auto", "kernel", "reference"),
                     help="threshold-mask implementation (docs/kernels.md; "
                          "kernel = Pallas, interpret mode off-TPU)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients sampled per round (sync: "
+                         "weight masking; async: dispatch pool)")
+    # buffered-async mode (docs/async.md): K > 0 switches the driver
+    ap.add_argument("--async-buffer", type=int, default=0, metavar="K",
+                    help="server buffer size; 0 = synchronous round")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="discard updates staler than this at arrival")
+    ap.add_argument("--staleness-power", type=float, default=0.5,
+                    help="aggregation weight (1+s)**-power")
+    ap.add_argument("--churn-seed", type=int, default=0)
+    ap.add_argument("--churn-jitter", type=int, default=0)
+    ap.add_argument("--churn-straggler-prob", type=float, default=0.0)
+    ap.add_argument("--churn-drop-prob", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -86,7 +100,8 @@ def main() -> None:
         adam=AdamHyper(lr=args.lr), client_mode="scan",
         use_kernel_adam=args.kernel_adam,
         exact_topk=not args.threshold_topk,
-        sparsify_backend=args.sparsify_backend)
+        sparsify_backend=args.sparsify_backend,
+        participation=args.participation)
     comp = make_compressor(fed)
     print(f"[train] {cfg.name}: {n_params/1e6:.2f}M params, "
           f"{args.clients} clients, L={args.local_epochs}, "
@@ -98,19 +113,49 @@ def main() -> None:
         return loss_fn(cfg, p, batch["tokens"],
                        frontend_embeds=batch.get("embeds"), remat="none")
 
-    round_fn = jax.jit(make_fl_round(fed, loss))
     state = fed_init(fed, params)
 
-    for r in range(args.rounds):
+    if args.async_buffer > 0:
+        # buffered-async mode: one virtual-clock simulation covers all
+        # rounds (server steps); clients re-train the same per-client
+        # shards at every dispatch — docs/async.md
+        from repro.core.async_fed import AsyncConfig, make_async_round
+        from repro.data.churn import ChurnConfig, ChurnModel
+
+        churn = ChurnModel(
+            ChurnConfig(seed=args.churn_seed, jitter=args.churn_jitter,
+                        straggler_prob=args.churn_straggler_prob,
+                        drop_prob=args.churn_drop_prob),
+            args.clients)
+        acfg = AsyncConfig(buffer_size=args.async_buffer,
+                           max_staleness=args.max_staleness,
+                           staleness_power=args.staleness_power)
+        run = make_async_round(fed, loss, acfg, churn=churn)
         batch = build_client_batches(cfg, args.clients, args.batch,
-                                     args.seq, seed=r,
-                                     non_iid=not args.iid)
+                                     args.seq, non_iid=not args.iid)
         t0 = time.time()
-        state, mets = round_fn(state, batch)
-        loss_v = float(jnp.mean(mets["loss"]))
-        bits = float(mets["uplink_bits"])
-        print(f"[round {r:3d}] loss={loss_v:.4f} "
-              f"uplink={bits/8e6:.2f} MB  ({time.time()-t0:.1f}s)")
+        state, mets = run(state, batch, rounds=args.rounds)
+        for r, (loss_v, bits) in enumerate(zip(mets["loss_per_step"],
+                                               mets["bits_per_step"])):
+            print(f"[round {r:3d}] loss={loss_v:.4f} "
+                  f"uplink={bits/8e6:.2f} MB")
+        print(f"[train] async: {mets['server_steps']} server steps, "
+              f"{mets['landed']} landed / {mets['dropped']} dropped / "
+              f"{mets['discarded']} discarded, "
+              f"total uplink={float(mets['uplink_bits'])/8e6:.2f} MB "
+              f"({time.time()-t0:.1f}s)")
+    else:
+        round_fn = jax.jit(make_fl_round(fed, loss))
+        for r in range(args.rounds):
+            batch = build_client_batches(cfg, args.clients, args.batch,
+                                         args.seq, seed=r,
+                                         non_iid=not args.iid)
+            t0 = time.time()
+            state, mets = round_fn(state, batch)
+            loss_v = float(jnp.mean(mets["loss"]))
+            bits = float(mets["uplink_bits"])
+            print(f"[round {r:3d}] loss={loss_v:.4f} "
+                  f"uplink={bits/8e6:.2f} MB  ({time.time()-t0:.1f}s)")
 
     if args.checkpoint:
         save_fed_state(state, args.checkpoint,

@@ -1,0 +1,120 @@
+"""Property-testing front door for this suite.
+
+When ``hypothesis`` is installed (CI installs it; see
+.github/workflows/ci.yml) the real library is re-exported unchanged —
+full shrinking, the works.  When it is not (the pinned repro container
+ships without it), a small deterministic fallback implements exactly
+the strategy subset this suite uses — ``integers``, ``floats``,
+``sampled_from``, ``lists``, ``composite`` — drawing examples from a
+seeded per-test ``numpy`` RNG.  No shrinking, but every run draws the
+same examples and a failure reports its example index, so it replays.
+
+Either way ``pytest`` sees plain passing/failing tests: the property
+suite runs everywhere instead of being importorskip'd away.
+
+Usage (identical under both backends)::
+
+    from _propcheck import HAVE_HYPOTHESIS, given, settings, st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 10), st.floats(0.0, 1.0))
+    def test_something(n, x): ...
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback, no new deps
+    HAVE_HYPOTHESIS = False
+    import numpy as _np
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        """A strategy is just ``rng -> value``."""
+
+        def __init__(self, fn):
+            self._fn = fn
+
+        def draw(self, rng):
+            return self._fn(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(
+                lambda rng: elems[int(rng.integers(0, len(elems)))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def _draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.draw(rng) for _ in range(n)]
+            return _Strategy(_draw)
+
+        @staticmethod
+        def composite(fn):
+            """``fn(draw, *args)`` -> strategy factory, like hypothesis:
+            the wrapped function's first arg is a ``draw`` callable."""
+            @functools.wraps(fn)
+            def factory(*args, **kwargs):
+                def _draw(rng):
+                    return fn(lambda strat: strat.draw(rng),
+                              *args, **kwargs)
+                return _Strategy(_draw)
+            return factory
+
+    st = _Strategies()
+
+    class settings:  # noqa: N801 - mirrors the hypothesis name
+        """Only ``max_examples`` is honoured; ``deadline`` etc. are
+        accepted and ignored (the fallback has no shrinker/timer)."""
+
+        def __init__(self, max_examples=_DEFAULT_EXAMPLES, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._propcheck_max_examples = self.max_examples
+            return fn
+
+    def given(*strategies):
+        """Run the test once per drawn example.  The RNG seed is derived
+        from the test's name, so the example stream is a pure function
+        of the code — rerunning a red test replays the same failure."""
+        def decorate(fn):
+            # NOT functools.wraps: __wrapped__ would make pytest see the
+            # original (x, alpha, ...) signature and hunt for fixtures
+            def runner():
+                n = getattr(runner, "_propcheck_max_examples",
+                            _DEFAULT_EXAMPLES)
+                seed = zlib.crc32(fn.__name__.encode())
+                for i in range(n):
+                    rng = _np.random.default_rng([seed, i])
+                    args = [s.draw(rng) for s in strategies]
+                    try:
+                        fn(*args)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            "falsifying example %d/%d of %s (seeded "
+                            "fallback, args=%r)" % (i, n, fn.__name__,
+                                                    args)) from e
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return decorate

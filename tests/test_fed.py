@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import FedConfig, fed_init, make_fl_round
-from repro.core.fed import _local_adam
+from repro.core.fed import _local_adam, active_client_count
 from repro.optim import AdamHyper, adam_init, adam_step
 
 
@@ -195,6 +195,29 @@ def test_onebit_adam_with_warmup_converges():
         st1, mets = rf1(st1, batches)
         losses.append(float(jnp.mean(mets["loss"])))
     assert losses[-1] < losses[0], losses
+
+
+def test_active_client_count_boundaries():
+    """The participation seam shared by the sync weight-masking round
+    and the async dispatch pool (see its docstring): host-static int in
+    [1, n_clients], Python (banker's) rounding, floor of one."""
+    mk = lambda p, C: FedConfig(algorithm="fedadam_ssm", n_clients=C,
+                                participation=p)
+    # boundaries: 0.0 never builds an empty round; 1.0 is everyone
+    assert active_client_count(mk(0.0, 7)) == 1
+    assert active_client_count(mk(1.0, 7)) == 7
+    assert active_client_count(mk(1.0, 1)) == 1
+    # tiny fractions clamp up to one client
+    assert active_client_count(mk(0.01, 20)) == 1
+    # rounding is Python round (banker's at .5 ties)
+    assert active_client_count(mk(0.5, 5)) == 2      # round(2.5) == 2
+    assert active_client_count(mk(0.5, 7)) == 4      # round(3.5) == 4
+    assert active_client_count(mk(0.25, 20)) == 5
+    # invariant over a sweep: static int within [1, C]
+    for C in (1, 3, 8, 20):
+        for p in np.linspace(0.0, 1.0, 21):
+            n = active_client_count(mk(float(p), C))
+            assert isinstance(n, int) and 1 <= n <= C
 
 
 def test_partial_participation():

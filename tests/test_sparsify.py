@@ -2,11 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-pytest.importorskip("hypothesis",
-                    reason="property tests need hypothesis installed")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+# real hypothesis when installed (CI), deterministic seeded fallback
+# otherwise — the property tests run everywhere, never skipped
+from _propcheck import given, settings, st
 
 from repro.core import sparsify as S
 

@@ -26,6 +26,7 @@ REQUIRED_DOCS = (
     "README.md",
     "EXPERIMENTS.md",
     "docs/ARCHITECTURE.md",
+    "docs/async.md",
     "docs/compressors.md",
     "docs/kernels.md",
     "docs/benchmarks.md",

@@ -43,6 +43,7 @@ from tools.lint.core import Context, Finding, rule
 #: (relative path glob, root mode) — "builders" or "all_public"
 SCAN_TARGETS = (
     ("src/repro/core/fed.py", "builders"),
+    ("src/repro/core/async_fed.py", "builders"),
     ("src/repro/launch/steps.py", "builders"),
     ("src/repro/core/aggregate.py", "all_public"),
     ("src/repro/core/sparsify.py", "all_public"),
