@@ -22,6 +22,13 @@ Row groups (BENCH_kernels.json):
   compress of a real smoke pytree: the per-leaf loop (4 launches/leaf on
   TPU) vs the packed two-launch pipeline, same arithmetic, bit-identical
   outputs.  ``launches``/``leaves`` record the launch accounting.
+* ``wirepack_*``                           — word-level wire encode/decode
+  (the bit-packing the transport actually ships) at flat n
+* ``uplink_bytes_dense_<model>`` / ``uplink_bytes_wire_<model>`` — the
+  transported-bytes ledger on a real smoke pytree: dense f32 planes vs
+  the measured WirePayload (``bytes_moved`` is the payload size; the
+  wire row's ``speedup_vs_reference`` is the byte reduction).  A
+  reduction below 8x at alpha=0.01 FAILS the run.
 
 ``run(json_out=True)`` additionally emits the schema-versioned
 ``BENCH_kernels.json`` artifact (schema: docs/benchmarks.md, enforced by
@@ -41,6 +48,8 @@ from repro.kernels.packed_topk.ref import packed_apply_ef_ref, \
 from repro.kernels.ssm_apply.ref import ssm_apply_ef_ref
 from repro.kernels.topk_mask.ops import overselect_bound
 from repro.kernels.topk_mask.ref import log2_taus, select_tau_ref
+from repro.kernels.wirepack.ref import pack_bbit_ref, pack_mask_bits_ref, \
+    unpack_mask_bits_ref
 from repro.roofline import fused_apply_bytes, fused_compress_bytes, \
     packed_apply_bytes, packed_compress_bytes, packed_select_bytes, \
     selection_bytes
@@ -176,6 +185,63 @@ def _e2e_rows(add, alpha: float):
             speedup_vs_reference=round(t_perleaf / t_packed, 3))
 
 
+def _wire_rows(add, alpha: float):
+    """Transported-bytes ledger on the smoke pytrees: ravel-dense f32
+    planes vs the WirePayload the SSM compressor actually ships.
+    ``bytes_moved`` is MEASURED from the payload arrays (and cross-checked
+    against the static layout math); us_per_call times the jitted encode.
+    The >=8x byte reduction at alpha=0.01 is a hard gate — padding or
+    capacity regressions in the wire layout fail the benchmark run."""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.core import wire
+    from repro.models import abstract_params, params as PM
+
+    for cname in E2E_CONFIGS:
+        cfg = reduce_for_smoke(get_config(cname))
+        sds = PM.abstract(abstract_params(cfg), "float32")
+        leaves, treedef = jax.tree_util.tree_flatten(sds)
+        keys = jax.random.split(jax.random.PRNGKey(3),
+                                3 * len(leaves)).reshape(3, len(leaves), 2)
+        trees = [jax.tree_util.tree_unflatten(treedef, [
+            jax.random.normal(kk, l.shape, jnp.float32)
+            for kk, l in zip(row, leaves)]) for row in keys]
+        mask = jax.tree_util.tree_unflatten(treedef, [
+            S.topk_mask_exact(w, S.k_for(w.size, alpha))
+            if w.size <= S.BLOCK else S.blocked_topk_mask(w, alpha)
+            for w in jax.tree_util.tree_leaves(trees[0])])
+        sW, sM, sV = (jax.tree_util.tree_map(
+            lambda x, m: x * m, t, mask) for t in trees)
+
+        sizes = tuple(l.size for l in leaves)
+        d = sum(sizes)
+        cap = wire.mask_value_capacity(sizes, alpha)
+
+        dense_fn = jax.jit(lambda a, b, c: wire.pack_dense((a, b, c)))
+        t_dense = _time(dense_fn, sW, sM, sV)
+        dense_bytes = wire.payload_nbytes(dense_fn(sW, sM, sV))
+        assert 8 * dense_bytes == wire.dense_wire_bits(sizes, 3)
+
+        wire_fn = jax.jit(
+            lambda a, b, c: wire.pack_shared_mask(a, b, c, cap))
+        t_wire = _time(wire_fn, sW, sM, sV)
+        wire_bytes = wire.payload_nbytes(wire_fn(sW, sM, sV))
+        assert 8 * wire_bytes == wire.mask_wire_bits(sizes, alpha)
+
+        ratio = dense_bytes / wire_bytes
+        if ratio < 8.0:
+            raise RuntimeError(
+                f"uplink_bytes_wire_{cname}: {wire_bytes} B is only "
+                f"{ratio:.2f}x below dense {dense_bytes} B "
+                f"(alpha={alpha}; wire-format regression)")
+
+        label = cname.replace("-", "_")
+        add(f"uplink_bytes_dense_{label}", d, t_dense,
+            bytes_moved=dense_bytes, speedup_vs_reference=1.0)
+        add(f"uplink_bytes_wire_{label}", d, t_wire,
+            f"reduction={ratio:.1f}x", bytes_moved=wire_bytes,
+            speedup_vs_reference=round(ratio, 3))
+
+
 def run(sizes=(1 << 16, 1 << 20, 1 << 23), alpha=0.05, json_out=False):
     rows, jrows = [], []
     add = row_builder(rows, jrows)
@@ -241,7 +307,28 @@ def run(sizes=(1 << 16, 1 << 20, 1 << 23), alpha=0.05, json_out=False):
                            3),
             launches=1)
 
+        # word-level wire encode/decode (the ref oracles the Pallas
+        # kernels are bitwise-tested against): bitmap pack/unpack and
+        # 8-bit code pack over the (n/128, 128) aligned buffer
+        sup = (jnp.abs(x) >= tau).astype(jnp.int32).reshape(-1, 128)
+        pm_fn = jax.jit(pack_mask_bits_ref)
+        t_pm = _time(pm_fn, sup)
+        words = pm_fn(sup)
+        um_fn = jax.jit(unpack_mask_bits_ref)
+        t_um = _time(um_fn, words)
+        codes = jax.random.randint(jax.random.PRNGKey(2), sup.shape,
+                                   0, 256, jnp.int32)
+        pb_fn = jax.jit(lambda c: pack_bbit_ref(c - 127, 8))
+        t_pb = _time(pb_fn, codes)
+        add("wirepack_pack_mask", n, t_pm, bytes_moved=4 * n + n // 8,
+            gb_per_s=round((4 * n + n // 8) / (t_pm * 1e-6) / 1e9, 3))
+        add("wirepack_unpack_mask", n, t_um, bytes_moved=4 * n + n // 8,
+            gb_per_s=round((4 * n + n // 8) / (t_um * 1e-6) / 1e9, 3))
+        add("wirepack_pack_bbit8", n, t_pb, bytes_moved=5 * n,
+            gb_per_s=round(5 * n / (t_pb * 1e-6) / 1e9, 3))
+
     _e2e_rows(add, alpha)
+    _wire_rows(add, alpha=0.01)
 
     write_csv("kernel_bench", ("name", "n", "us_per_call", "derived"), rows)
     if json_out:

@@ -4,12 +4,14 @@
                      deltas.  When the client axis is sharded over mesh axes
                      this lowers to an ALL-REDUCE of the full model: the
                      FedAdam baseline's uplink, ~2*d*q bytes/link.
-``sparse_gather``  — per client, pack the k kept values (+ one shared index
-                     vector for all three tensors — the SSM alignment!) and
-                     ALL-GATHER the packed representation; every client then
-                     replays the server scatter-add locally.  Collective
-                     bytes drop from O(d*q) to O(N*k*(3q + log d)) — the
-                     paper's Section-IV uplink saving realized on ICI.
+``sparse_gather``  — per client, pack the wire representation — a uint32
+                     support bitmap (ONE bitmap for all three tensors —
+                     the SSM alignment!) + the k kept values — and
+                     ALL-GATHER it; every client then replays the server
+                     fold locally.  Collective bytes drop from O(d*q) to
+                     O(N*(d/8 + 3kq/8)) — the paper's Section-IV uplink
+                     saving realized on ICI, byte-for-byte the reported
+                     ``uplink_bits`` (core/wire.py).
 
 Napkin math (per link, bf16 values, int32 indices, alpha=0.05, N=16):
   dense all-reduce of 3 tensors : ~2 * 3d * 2B       = 12 d bytes
@@ -190,36 +192,64 @@ def sparse_shared_gather_sum(sW_c, sM_c, sV_c, alpha, weights,
 # In global-view jnp, GSPMD turns the pack's scatter into replicated giant
 # index tensors (observed: s32[16,1080,1M,3] all-gathers).  Under shard_map
 # the pack is a *local* O(n_loc) program per device and the ONLY collective
-# is the explicit all-gather of the packed (values, indices) — byte-for-byte
-# the paper's uplink.  Each (data-row, model-col) device packs its own
-# client's slice of its own model shard; after the gather over the client
-# axes, every device scatter-adds the C packs into its local dense shard:
-# no model-axis communication at all (the server reduction is replayed
-# shard-locally).
+# is the explicit all-gather of the WIRE representation — a uint32 support
+# bitmap (1 bit per local slot, core/wire.py word convention) plus the
+# first-kb compacted f32 value stream.  No index tensor crosses the links:
+# the receiver recomputes positions from the bitmap by prefix sum, so the
+# gathered bytes are exactly the Section-IV count (d bits of mask + k q-bit
+# values per client), matching ``8 * WirePayload.nbytes``.  Each (data-row,
+# model-col) device packs its own client's slice of its own model shard;
+# after the gather over the client axes, every device replays the server
+# fold into its local dense shard: no model-axis communication at all.
 
 
 def _local_pack(wf, alpha):
-    """wf: (n_loc,) masked dense, device-local.  -> (vals, idx, valid)."""
+    """wf: (n_loc,) masked dense, device-local.  -> (words, pos, keep, kb):
+    the support bitmap word-packed to uint32 + the compaction plan
+    (prefix-sum positions, keep = supported and under capacity).
+    Capacity kb per the over-selection contract, as in _capacity above."""
+    from repro.core import wire
     n = wf.shape[0]
-    # capacity per the over-selection contract, as in _capacity above
     k = S.k_for(n, alpha)
     kb = min(n, k + overselect_bound(k))
     m = wf != 0
+    words = wire.pack_bits_1d(m)
     pos = jnp.cumsum(m.astype(jnp.int32)) - 1
     keep = m & (pos < kb)
+    return words, pos, keep, kb
+
+
+def _compact_vals(xf, pos, keep, kb):
+    """First-kb compaction of ``xf`` onto the support plan (slot kb is
+    the overflow drop slot, sliced away)."""
     dst = jnp.where(keep, pos, kb)
-    vals = jnp.zeros((kb + 1,), wf.dtype).at[dst].set(wf, mode="drop")
-    idxp = jnp.zeros((kb + 1,), jnp.int32).at[dst].set(
-        jnp.arange(n, dtype=jnp.int32) + 1, mode="drop")
-    return vals[:kb], jnp.maximum(idxp[:kb] - 1, 0), idxp[:kb] > 0
+    return jnp.zeros((kb + 1,), _F32).at[dst].set(
+        xf.astype(_F32), mode="drop")[:kb]
 
 
-def _gathered_scatter(vals_g, idx_g, valid_g, weights, n_loc):
-    """vals_g/idx_g/valid_g: (C, kb) post-gather; -> (n_loc,) f32 sum."""
-    wv = vals_g.astype(_F32) * weights.astype(_F32)[:, None]
-    wv = jnp.where(valid_g, wv, 0.0)
-    out = jnp.zeros((n_loc,), _F32)
-    return out.at[idx_g.reshape(-1)].add(wv.reshape(-1))
+def _expand_vals(words, vals, n_loc):
+    """Inverse of the (bitmap, stream) pack: (nw,) uint32 words + (kb,)
+    values -> (n_loc,) f32 dense (capacity-overflow slots decode to 0)."""
+    from repro.core import wire
+    sup = wire.unpack_bits_1d(words, n_loc) == 1
+    pos = jnp.cumsum(sup.astype(jnp.int32)) - 1
+    kb = vals.shape[0]
+    taken = jnp.take(vals.astype(_F32), jnp.clip(pos, 0, kb - 1))
+    return jnp.where(sup & (pos < kb), taken, 0.0)
+
+
+def _gathered_decode_sum(words_g, vals_g, weights, n_loc):
+    """words_g (C, nw) + vals_g (C, kb) post-gather -> (n_loc,) f32
+    weighted sum, folded in client order with ``round_scan``'s exact
+    arithmetic (``acc + w * x``, client 0 first) so the mesh transport
+    is bit-identical to the scan reference when nothing overflows."""
+    def body(acc, xs):
+        wrds, vals, wgt = xs
+        return acc + wgt * _expand_vals(wrds, vals, n_loc), 0.0
+
+    acc, _ = lax.scan(body, jnp.zeros((n_loc,), _F32),
+                      (words_g, vals_g, weights.astype(_F32)))
+    return acc
 
 
 def make_shardmap_sparse_aggregate(mesh, param_pspecs, client_axes, alpha,
@@ -270,45 +300,52 @@ def make_shardmap_sparse_aggregate(mesh, param_pspecs, client_axes, alpha,
             for sdim in shape_loc:
                 n_loc *= sdim
             wf = w.reshape(n_loc)
-            vals_w, idx, valid = _local_pack(wf, alpha)
-            take = lambda t: jnp.where(
-                valid, jnp.take(t.reshape(n_loc), idx), 0)
-            vals_m, vals_v = take(m), take(v)
+            words, pos, keep, kb = _local_pack(wf, alpha)
+            vals_w = _compact_vals(wf, pos, keep, kb)
+            vals_m = _compact_vals(m.reshape(n_loc), pos, keep, kb)
+            vals_v = _compact_vals(v.reshape(n_loc), pos, keep, kb)
             if vdt is not None:
                 vals_w = vals_w.astype(vdt)
                 vals_m = vals_m.astype(vdt)
                 vals_v = vals_v.astype(vdt)
             if has_err:
                 # what the server actually receives for this client: the
-                # (possibly wire-cast) packed values scattered back; the
-                # capacity-overflow remainder feeds the EF residual
-                kept = jnp.zeros((n_loc,), _F32).at[idx].add(
-                    jnp.where(valid, vals_w.astype(_F32), 0.0))
+                # (possibly wire-cast) value stream expanded back onto the
+                # bitmap; the capacity-overflow remainder feeds the EF
+                # residual
+                kept = jnp.where(
+                    keep, jnp.take(vals_w.astype(_F32),
+                                   jnp.clip(pos, 0, kb - 1)), 0.0)
                 err = lerr[i].reshape(n_loc)
                 # drop first, then add: when nothing overflows the drop is
                 # exactly 0.0 and the residual passes through bitwise
                 drop = wf.astype(_F32) - kept
                 new_err = (err.astype(_F32) + drop).astype(err.dtype)
                 outs_err.append(new_err.reshape(lerr[i].shape))
-            # THE UPLINK: all-gather packed representation over client axes
+            # THE UPLINK: all-gather bitmap words + value streams over the
+            # client axes — the only arrays that cross the links
             gather = lambda t: _gather_clients(t, caxes)
-            vw_g, idx_g, valid_g = gather(vals_w), gather(idx), gather(valid)
-            outs_w.append(_gathered_scatter(vw_g, idx_g, valid_g, weights,
-                                            n_loc).reshape(shape_loc))
+            words_g = gather(words)
+            outs_w.append(_gathered_decode_sum(
+                words_g, gather(vals_w), weights, n_loc).reshape(shape_loc))
             if shared:
-                vm_g, vv_g = gather(vals_m), gather(vals_v)
-                outs_m.append(_gathered_scatter(
-                    vm_g, idx_g, valid_g, weights, n_loc).reshape(shape_loc))
-                outs_v.append(_gathered_scatter(
-                    vv_g, idx_g, valid_g, weights, n_loc).reshape(shape_loc))
+                # the SSM alignment: ONE bitmap describes all three streams
+                outs_m.append(_gathered_decode_sum(
+                    words_g, gather(vals_m), weights,
+                    n_loc).reshape(shape_loc))
+                outs_v.append(_gathered_decode_sum(
+                    words_g, gather(vals_v), weights,
+                    n_loc).reshape(shape_loc))
             else:
-                # independent masks: re-pack m and v with their own indices
+                # independent masks: m and v ship their own bitmaps
                 for src, sink in ((m, outs_m), (v, outs_v)):
-                    va, ix, vd = _local_pack(src.reshape(n_loc), alpha)
+                    sf = src.reshape(n_loc)
+                    wds, ps, kp, cap = _local_pack(sf, alpha)
+                    va = _compact_vals(sf, ps, kp, cap)
                     if vdt is not None:
                         va = va.astype(vdt)
-                    sink.append(_gathered_scatter(
-                        gather(va), gather(ix), gather(vd), weights,
+                    sink.append(_gathered_decode_sum(
+                        gather(wds), gather(va), weights,
                         n_loc).reshape(shape_loc))
         unf = lambda leaves: jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(w_tree), leaves)
@@ -343,9 +380,43 @@ def _gather_clients(x, caxes):
     return jax.lax.all_gather(x, name, axis=0, tiled=False)
 
 
+def wire_gather_sum(compressor, payload_c, like, weights):
+    """Aggregate client-stacked :class:`~repro.core.wire.WirePayload`\\ s:
+    replicate the payload arrays (THE uplink — only bit-packed words and
+    compact f32 value/scale streams cross the client axis), then decode
+    and fold in client order with ``round_scan``'s exact arithmetic, so
+    the vmap wire transport is bit-identical to the scan reference.
+    ``like`` is the params template the decoder shapes against."""
+    payload_c = jax.tree.map(_maybe_replicate, payload_c)
+    zero = lambda: jax.tree.map(lambda x: jnp.zeros(x.shape, _F32), like)
+    acc0 = (zero(), zero(), zero())
+
+    def body(acc, xs):
+        payload, wgt = xs
+        sW, sM, sV = compressor.unpack_wire(payload, like)
+        add = lambda a, s: jax.tree.map(
+            lambda x, y: x + wgt * y.astype(_F32), a, s)
+        aW, aM, aV = acc
+        return (add(aW, sW), add(aM, sM), add(aV, sV)), 0.0
+
+    (aW, aM, aV), _ = lax.scan(body, acc0,
+                               (payload_c, weights.astype(_F32)))
+    return aW, aM, aV
+
+
 def packed_gather_sum(compressor, sW_c, sM_c, sV_c, weights, *, alpha,
-                      value_dtype=None, sort_free=True):
-    """Aggregate any compressor's packed representation, keyed on its
+                      value_dtype=None, sort_free=True,
+                      payload_c=None, like=None):
+    """Aggregate any compressor's packed representation.
+
+    With ``payload_c`` (client-stacked WirePayloads from
+    ``make_client_step(..., emit="wire")``) the transport is the wire
+    format itself: :func:`wire_gather_sum` moves the bit-packed words
+    across the client axis — the bytes ARE the reported
+    ``8 * WirePayload.nbytes`` — for every wire-enabled scheme, sparse
+    and quantized alike.
+
+    Otherwise the legacy dense-carrier paths apply, keyed on the
     ``transport`` tag (see core/compressors and docs/compressors.md):
 
     * ``shared_sparse``      — one index set per client-leaf, three value
@@ -356,8 +427,11 @@ def packed_gather_sum(compressor, sW_c, sM_c, sV_c, weights, *, alpha,
                                carriers have no sparse structure to pack).
 
     New compressors therefore get the sparse all-gather path for free by
-    declaring the matching transport.
+    declaring the matching transport (or the wire path by declaring a
+    ``wire_layout``).
     """
+    if payload_c is not None:
+        return wire_gather_sum(compressor, payload_c, like, weights)
     t = getattr(compressor, "transport", "dense")
     if t == "shared_sparse":
         return sparse_shared_gather_sum(sW_c, sM_c, sV_c, alpha, weights,

@@ -58,8 +58,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec
 
-from repro.core import aggregate, compressors
-from repro.core.compressors import DIAG_KEYS
+from repro.core import aggregate, compressors, wire
+from repro.core.compressors import DIAG_KEYS, Deltas
 from repro.core.fed import (
     FedConfig, FedState, active_client_count, make_client_step,
     make_server_apply,
@@ -218,6 +218,30 @@ def make_buffer_apply(fed: FedConfig,
     return jax.jit(buffer_apply)
 
 
+def make_wire_buffer_apply(fed: FedConfig,
+                           comp: Optional[compressors.Compressor] = None):
+    """Wire-format twin of :func:`make_buffer_apply`: the buffer holds
+    the K landed :class:`~repro.core.wire.WirePayload`\\ s (stacked
+    ``(K, ...)``) — the bytes that actually crossed the uplink — and the
+    server decodes them against the params template and folds in arrival
+    order (``aggregate.wire_gather_sum``, which replays ``round_scan``'s
+    exact arithmetic), so the degenerate-config bitwise equivalence is
+    preserved payload-for-payload."""
+    if comp is None:
+        comp = compressors.make_compressor(fed)
+    server_apply = make_server_apply(fed, comp)
+
+    def wsum_fold(carry, w):
+        return carry + w, 0.0
+
+    def buffer_apply(W, M, V, payloads, weights):
+        aW, aM, aV = aggregate.wire_gather_sum(comp, payloads, W, weights)
+        wsum, _ = lax.scan(wsum_fold, jnp.zeros((), _F32), weights)
+        return server_apply(W, M, V, aW, aM, aV, wsum)
+
+    return jax.jit(buffer_apply)
+
+
 def make_commit_client(has_cs: bool):
     """``commit(cs, new_c, c) -> cs`` — write ONE accepted client's new
     compressor state into slot ``c`` of the stacked ``client_state``
@@ -264,6 +288,8 @@ class AsyncRoundDriver:
         self._apply = make_buffer_apply(fed, self._comp)
         self._exec = None          # built on first run (has_cs known then)
         self._commit = None
+        self._apply_wire = None    # wire-format server step (lazy)
+        self._repack = None        # carriers -> WirePayload (lazy)
 
     # -- helpers --------------------------------------------------------
 
@@ -335,7 +361,17 @@ class AsyncRoundDriver:
         round0 = server_round
 
         d = sum(x.size for x in jax.tree.leaves(W))
+        sizes = tuple(x.size for x in jax.tree.leaves(W))
+        # wire mode: buffer the bit-packed WirePayloads and bill the
+        # MEASURED landed bytes; analytic fallback only for configs with
+        # no wire realization (q_bits != 32 etc.)
+        wire_mode = self._comp.wire_bits_per_client(sizes) is not None
         bits_client = self._comp.bits_per_client(d)
+        if wire_mode and self._repack is None:
+            comp = self._comp
+            self._repack = jax.jit(
+                lambda sW, sM, sV: comp.pack_wire(Deltas(sW, sM, sV)))
+            self._apply_wire = make_wire_buffer_apply(fed, comp)
 
         # participation: the async realization of the seam documented on
         # fed.active_client_count — the dispatch pool is exactly the
@@ -409,7 +445,16 @@ class AsyncRoundDriver:
                 if has_cs:
                     cs = self._commit(cs, rec["ncs"], c)
                 landed += 1
-                bits_total += bits_client
+                if wire_mode:
+                    # re-materialize the landed bytes (pack_wire is
+                    # idempotent on the decoded carriers) and bill the
+                    # MEASURED payload size — drops/discards above never
+                    # reach this line, so they stay unbilled
+                    rec["wire"] = self._repack(rec["sW"], rec["sM"],
+                                               rec["sV"])
+                    bits_total += 8 * wire.payload_nbytes(rec["wire"])
+                else:
+                    bits_total += bits_client
                 eff_w = float(base_w[c]) \
                     * float(staleness_scale(stale, acfg.staleness_power))
                 buffer.append(dict(rec, stale=stale, w=eff_w))
@@ -419,8 +464,14 @@ class AsyncRoundDriver:
                         lambda *xs: jnp.stack(xs),
                         *[e[key] for e in buffer])
                     wts = jnp.asarray([e["w"] for e in buffer], _F32)
-                    W, M, V = self._apply(W, M, V, stack("sW"),
-                                          stack("sM"), stack("sV"), wts)
+                    if wire_mode:
+                        # the buffer holds WirePayloads: the server step
+                        # decodes the transported bytes themselves
+                        W, M, V = self._apply_wire(W, M, V, stack("wire"),
+                                                   wts)
+                    else:
+                        W, M, V = self._apply(W, M, V, stack("sW"),
+                                              stack("sM"), stack("sV"), wts)
                     server_round += 1
                     steps += 1
                     bits_per_step.append(bits_total - sum(bits_per_step))

@@ -24,8 +24,13 @@ import math
 from typing import Sequence
 
 
-def _ceil_log2(d: int) -> float:
-    return math.ceil(math.log2(max(2, d)))
+def _ceil_log2(d: int) -> int:
+    """ceil(log2 d) index-representation bits.  d <= 1 needs ZERO bits
+    (a single-slot index set is fully determined) — the old ``max(2, d)``
+    clamp silently billed 1 bit for degenerate 1-element test trees."""
+    if d <= 1:
+        return 0
+    return math.ceil(math.log2(d))
 
 
 def bits_fedadam(d: int, n_clients: int, q: int = 32) -> int:
@@ -61,7 +66,24 @@ def bits_efficient_adam(d: int, n_clients: int, q: int = 32,
 
 
 def bits_for(algorithm: str, d: int, k: int, n_clients: int, q: int = 32,
-             warmup: bool = False, quant_bits: int = 8) -> int:
+             warmup: bool = False, quant_bits: int = 8, *,
+             sizes: "Sequence[int] | None" = None,
+             alpha: "float | None" = None,
+             mask_scope: str = "per_tensor",
+             exact_topk: bool = True) -> int:
+    """Uplink bits for ``n_clients`` clients of algorithm ``algorithm``.
+
+    Without ``sizes`` this is the paper-analytic Section IV/VII count
+    (the formulas above).  With ``sizes`` (the model's per-leaf element
+    counts) it is the WIRE-EXACT count: ``8 * WirePayload.nbytes`` of
+    the payload the registered compressor actually ships, including
+    layout padding and static mask-capacity slack (core/wire.py) —
+    mask schemes then also need ``alpha``/``mask_scope``/``exact_topk``.
+    """
+    if sizes is not None:
+        return n_clients * _wire_bits_one(
+            algorithm, sizes, alpha, mask_scope, exact_topk,
+            warmup=warmup, quant_bits=quant_bits, q=q)
     if algorithm in ("fedadam",):
         return bits_fedadam(d, n_clients, q)
     if algorithm in ("fedadam_top",):
@@ -74,4 +96,33 @@ def bits_for(algorithm: str, d: int, k: int, n_clients: int, q: int = 32,
         return bits_onebit_adam(d, n_clients, q, warmup=warmup)
     if algorithm == "efficient_adam":
         return bits_efficient_adam(d, n_clients, q, bits=quant_bits)
+    raise ValueError(algorithm)
+
+
+def _wire_bits_one(algorithm: str, sizes, alpha, mask_scope: str,
+                   exact_topk: bool, *, warmup: bool, quant_bits: int,
+                   q: int) -> int:
+    """Wire-exact bits for ONE client (lazy import: wire pulls in jax,
+    which this accounting module otherwise never needs)."""
+    from repro.core import wire
+    if q != wire.VALUE_BITS:
+        raise ValueError(
+            f"the wire format ships f32 side streams; q={q} has no "
+            f"wire-exact count (only q={wire.VALUE_BITS})")
+    d = sum(int(n) for n in sizes)
+    if algorithm == "fedadam" or (algorithm == "onebit_adam" and warmup):
+        return wire.dense_wire_bits(sizes, 3)
+    if algorithm == "fedsgd":
+        return wire.dense_wire_bits(sizes, 1)
+    if algorithm in ("fedadam_top", "fedadam_ssm", "ssm_m", "ssm_v",
+                     "fairness_top"):
+        if alpha is None:
+            raise ValueError(
+                f"wire-exact bits for {algorithm!r} need alpha")
+        return wire.mask_wire_bits(sizes, alpha, mask_scope, exact_topk,
+                                   shared=algorithm != "fedadam_top")
+    if algorithm == "onebit_adam":
+        return wire.sign_wire_bits(sizes)
+    if algorithm == "efficient_adam":
+        return wire.bbit_wire_bits(sizes, quant_bits)
     raise ValueError(algorithm)

@@ -81,11 +81,16 @@ class Packed(NamedTuple):
     (masked or quantized in place).  ``diag`` holds encoder-side
     diagnostics (:data:`DIAG_KEYS`) — computed where the error-feedback
     adjusted input exists, and explicitly NOT part of the transported
-    payload (it never enters the bit accounting)."""
+    payload (it never enters the bit accounting).  ``wire`` is the
+    bit-packed :class:`repro.core.wire.WirePayload` realization of the
+    carriers — the arrays that actually cross the uplink (``None`` only
+    for configurations outside the wire format's layout constants, which
+    fall back to dense transport + analytic accounting)."""
     W: Any
     M: Any
     V: Any
     diag: Dict[str, jax.Array]
+    wire: Any = None
 
 
 def tree_sub(a, b):
@@ -135,6 +140,10 @@ class Compressor:
     transport: str = "dense"
     local_update: str = "adam"
     server_update: str = "wmv"
+    #: Wire encoding family (core/wire.py): ``mask_shared`` |
+    #: ``mask_independent`` | ``sign`` | ``bbit`` | ``dense`` | None
+    #: (no wire realization — dense transport, analytic bits only).
+    wire_layout: Optional[str] = None
 
     # -- state ----------------------------------------------------------
     def init_state(self, params) -> Optional[Any]:
@@ -161,12 +170,39 @@ class Compressor:
         inverts dense-carrier compressors (values already in place)."""
         return Deltas(packed.W, packed.M, packed.V)
 
+    # -- wire realization ----------------------------------------------
+    def pack_wire(self, carriers: Deltas) -> Optional[Any]:
+        """Encode a dense carrier triple (the ``Packed.W/M/V`` planes, or
+        equivalently the decoded outputs of :meth:`unpack_wire` — the
+        encoding is idempotent) into the transported
+        :class:`~repro.core.wire.WirePayload`.  Returns ``None`` when the
+        configuration has no wire realization.  The buffered-async driver
+        uses this to re-materialize the landed bytes per accepted update
+        (:mod:`repro.core.async_fed`)."""
+        return None
+
+    def unpack_wire(self, wire, like) -> Deltas:
+        """Decode a :class:`~repro.core.wire.WirePayload` produced by
+        :meth:`compress` back to the dense carrier triple.  ``like`` is
+        any tree with the model's structure/shapes/dtypes (the params
+        template).  Only meaningful when :attr:`wire_layout` is set."""
+        raise NotImplementedError(
+            f"{self.name} has no wire realization")
+
     # -- accounting -----------------------------------------------------
     def bits_per_client(self, d: int) -> int:
         """Uplink bits ONE client pays per round for a d-dimensional
         model (Section IV / VII).  The round multiplies by the number of
         participating clients; must equal ``comm.bits_for(name, d, k, 1)``."""
         raise NotImplementedError
+
+    def wire_bits_per_client(self, sizes) -> Optional[int]:
+        """Measured wire bits ONE client pays per round, equal to
+        ``8 * payload_nbytes`` of the payload :meth:`compress` builds
+        for a tree with leaf ``sizes`` — or ``None`` when this
+        configuration has no wire realization (the round metric then
+        falls back to the analytic :meth:`bits_per_client`)."""
+        return None
 
 
 # ---------------------------------------------------------------------------

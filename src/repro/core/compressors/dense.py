@@ -11,9 +11,10 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core import comm
+from repro.core import comm, wire
 from repro.core.compressors.base import (
     Compressor, Deltas, Packed, diag_metrics, register, tree_size,
+    tree_zeros_like,
 )
 
 
@@ -28,16 +29,40 @@ class DenseCompressor(Compressor):
     server_update: str = "wmv"
 
     transport = "dense"
+    wire_layout = "dense"
+
+    def _wire_ok(self) -> bool:
+        # the wire ships f32 planes — exact only at the paper's q = 32
+        return self.q_bits == wire.VALUE_BITS
 
     def compress(self, deltas: Deltas, state):
         packed = Packed(deltas.W, deltas.M, deltas.V,
-                        diag_metrics(deltas, deltas))
+                        diag_metrics(deltas, deltas),
+                        self.pack_wire(deltas))
         return packed, state, self.bits_per_client(tree_size(deltas.W))
+
+    def pack_wire(self, carriers: Deltas):
+        if not self._wire_ok():
+            return None
+        trees = (carriers.W, carriers.M, carriers.V)[:self.n_tensors]
+        return wire.pack_dense(trees)
+
+    def unpack_wire(self, payload, like) -> Deltas:
+        planes = wire.unpack_dense(payload, like)
+        zeros = tree_zeros_like(like)
+        if self.n_tensors == 3:
+            return Deltas(*planes)
+        return Deltas(planes[0], zeros, zeros)
 
     def bits_per_client(self, d: int) -> int:
         if self.n_tensors == 3:
             return comm.bits_fedadam(d, 1, self.q_bits)
         return comm.bits_fedsgd(d, 1, self.q_bits)
+
+    def wire_bits_per_client(self, sizes):
+        if not self._wire_ok():
+            return None
+        return wire.dense_wire_bits(sizes, self.n_tensors)
 
 
 @register("fedadam")

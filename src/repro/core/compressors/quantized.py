@@ -25,7 +25,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import comm, quantize
+from repro.core import comm, quantize, wire
 from repro.core.compressors.base import (
     Compressor, Deltas, Packed, diag_metrics, register, tree_add,
     tree_size, tree_sub, tree_zeros_like,
@@ -43,9 +43,16 @@ class OneBitAdamCompressor(Compressor):
     transport = "quantized"
     local_update = "momentum"
     server_update = "precond_m"
+    wire_layout = "sign"
 
     def init_state(self, params):
         return {"err": jax.tree.map(jnp.zeros_like, params)}
+
+    def _wire_ok(self) -> bool:
+        # the wire's scale stream is one f32 per SCALE_BLOCK elements —
+        # only that block size (and q = 32) matches the layout constants
+        return self.block == wire.SCALE_BLOCK \
+            and self.q_bits == wire.VALUE_BITS
 
     def compress(self, deltas: Deltas, state):
         assert state is not None, "1-bit Adam requires error-feedback state"
@@ -54,12 +61,31 @@ class OneBitAdamCompressor(Compressor):
         new_state = {"err": tree_sub(dM, q)}
         z = tree_zeros_like(q)
         ef = Deltas(deltas.W, dM, deltas.V)
+        payload = wire.pack_sign(q) if self._wire_ok() else None
         packed = Packed(z, q, tree_zeros_like(deltas.V),
-                        diag_metrics(ef, Deltas(deltas.W, q, deltas.V)))
+                        diag_metrics(ef, Deltas(deltas.W, q, deltas.V)),
+                        payload)
         return packed, new_state, self.bits_per_client(tree_size(deltas.W))
+
+    def pack_wire(self, carriers: Deltas):
+        # the M carrier is two-valued +-scale per block, so re-encoding
+        # a decoded carrier recovers the same scales/signs bitwise
+        if not self._wire_ok():
+            return None
+        return wire.pack_sign(carriers.M)
+
+    def unpack_wire(self, payload, like) -> Deltas:
+        z = tree_zeros_like(like)
+        return Deltas(z, wire.unpack_sign(payload, like),
+                      tree_zeros_like(like))
 
     def bits_per_client(self, d: int) -> int:
         return comm.bits_onebit_adam(d, 1, self.q_bits, block=self.block)
+
+    def wire_bits_per_client(self, sizes):
+        if not self._wire_ok():
+            return None
+        return wire.sign_wire_bits(sizes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,26 +100,62 @@ class EfficientAdamCompressor(Compressor):
     transport = "quantized"
     local_update = "local_adam"
     server_update = "w_only"
+    wire_layout = "bbit"
 
     def init_state(self, params):
         return {"err": jax.tree.map(jnp.zeros_like, params)}
+
+    def _wire_ok(self) -> bool:
+        return self.block == wire.SCALE_BLOCK \
+            and self.q_bits == wire.VALUE_BITS \
+            and self.quant_bits in (2, 4, 8)
 
     def compress(self, deltas: Deltas, state):
         assert state is not None, \
             "Efficient-Adam requires error-feedback state"
         dW = tree_add(deltas.W, state["err"])
-        q = quantize.tree_uniform_quant(dW, self.quant_bits, self.block)
+        # split quantization into encode (codes + scales: the wire
+        # arrays) and decode (the dense carrier) — the composition is
+        # bitwise ``quantize.tree_uniform_quant``
+        leaves, treedef = jax.tree_util.tree_flatten(dW)
+        enc = [quantize.uniform_encode(x, self.quant_bits, self.block)
+               for x in leaves]
+        q = jax.tree_util.tree_unflatten(treedef, [
+            quantize.uniform_decode(c, s, self.block).astype(x.dtype)
+            for (c, s), x in zip(enc, leaves)])
         new_state = {"err": tree_sub(dW, q)}
         ef = Deltas(dW, deltas.M, deltas.V)
+        payload = wire.pack_bbit_codes(
+            [c for c, _ in enc], [s for _, s in enc], self.quant_bits) \
+            if self._wire_ok() else None
         packed = Packed(q, tree_zeros_like(deltas.M),
                         tree_zeros_like(deltas.V),
-                        diag_metrics(ef, Deltas(q, deltas.M, deltas.V)))
+                        diag_metrics(ef, Deltas(q, deltas.M, deltas.V)),
+                        payload)
         return packed, new_state, self.bits_per_client(tree_size(deltas.W))
+
+    def pack_wire(self, carriers: Deltas):
+        if not self._wire_ok():
+            return None
+        leaves, _ = jax.tree_util.tree_flatten(carriers.W)
+        enc = [quantize.uniform_encode(x, self.quant_bits, self.block)
+               for x in leaves]
+        return wire.pack_bbit_codes(
+            [c for c, _ in enc], [s for _, s in enc], self.quant_bits)
+
+    def unpack_wire(self, payload, like) -> Deltas:
+        w = wire.unpack_bbit_codes(payload, like, self.quant_bits)
+        return Deltas(w, tree_zeros_like(like), tree_zeros_like(like))
 
     def bits_per_client(self, d: int) -> int:
         return comm.bits_efficient_adam(d, 1, self.q_bits,
                                         bits=self.quant_bits,
                                         block=self.block)
+
+    def wire_bits_per_client(self, sizes):
+        if not self._wire_ok():
+            return None
+        return wire.bbit_wire_bits(sizes, self.quant_bits)
 
 
 @register("onebit_adam")

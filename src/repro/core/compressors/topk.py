@@ -35,7 +35,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import comm, masks
+from repro.core import comm, masks, wire
 from repro.core import sparsify as S
 from repro.core.compressors.base import (
     Compressor, Deltas, Packed, register, tree_add, tree_size, tree_sub,
@@ -83,6 +83,17 @@ class _TopKBase(Compressor):
         inputs (e.g. mixed dtypes defeat the packed layout)."""
         return None
 
+    def _wire_ok(self) -> bool:
+        # wire value streams ship as f32 — exact only at q = 32
+        return self.q_bits == wire.VALUE_BITS
+
+    def _mask_capacity(self, sizes) -> int:
+        return wire.mask_value_capacity(sizes, self.alpha,
+                                        self.mask_scope, self.exact_topk)
+
+    def _pack_wire(self, sW, sM, sV, sizes):
+        raise NotImplementedError
+
     def compress(self, deltas: Deltas, state):
         dW, dM, dV = deltas
         if state is not None:
@@ -116,8 +127,17 @@ class _TopKBase(Compressor):
             "norm_dm": S.tree_norm(dM),
             "norm_dv": S.tree_norm(dV),
         }
-        packed = Packed(sW, sM, sV, diag)
+        packed = Packed(sW, sM, sV, diag, self.pack_wire(Deltas(sW, sM, sV)))
         return packed, new_state, self.bits_per_client(tree_size(deltas.W))
+
+    def pack_wire(self, carriers: Deltas):
+        # idempotent: the sparse carriers' union support IS the mask, so
+        # re-encoding a decoded triple reproduces the payload bitwise
+        # (what lets the async driver re-materialize landed bytes)
+        if not self._wire_ok():
+            return None
+        sizes = tuple(x.size for x in jax.tree.leaves(carriers.W))
+        return self._pack_wire(carriers.W, carriers.M, carriers.V, sizes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +148,7 @@ class SharedTopKCompressor(_TopKBase):
     rule: str = "ssm_w"                   # ssm_w | ssm_m | ssm_v | fairness_top
 
     transport = "shared_sparse"
+    wire_layout = "mask_shared"
 
     def _masks(self, dW, dM, dV):
         m = masks.shared_mask(self.rule, dW, dM, dV, self.alpha,
@@ -142,9 +163,21 @@ class SharedTopKCompressor(_TopKBase):
             value_dtype=self.value_dtype, with_residual=with_residual)
         return sW, sM, sV, err, m
 
+    def _pack_wire(self, sW, sM, sV, sizes):
+        return wire.pack_shared_mask(sW, sM, sV, self._mask_capacity(sizes))
+
+    def unpack_wire(self, payload, like) -> Deltas:
+        return Deltas(*wire.unpack_shared_mask(payload, like))
+
     def bits_per_client(self, d: int) -> int:
         return comm.bits_fedadam_ssm(d, S.k_for(d, self.alpha), 1,
                                      self.q_bits)
+
+    def wire_bits_per_client(self, sizes):
+        if not self._wire_ok():
+            return None
+        return wire.mask_wire_bits(sizes, self.alpha, self.mask_scope,
+                                   self.exact_topk, shared=True)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +187,7 @@ class IndependentTopKCompressor(_TopKBase):
     name: str = "fedadam_top"
 
     transport = "independent_sparse"
+    wire_layout = "mask_independent"
 
     def _masks(self, dW, dM, dV):
         # three distinct masks — no shared-mask fusion, but the mask
@@ -172,9 +206,22 @@ class IndependentTopKCompressor(_TopKBase):
             dW, dM, dV, self.alpha, self.mask_scope,
             value_dtype=self.value_dtype, with_residual=with_residual)
 
+    def _pack_wire(self, sW, sM, sV, sizes):
+        return wire.pack_independent_mask(sW, sM, sV,
+                                          self._mask_capacity(sizes))
+
+    def unpack_wire(self, payload, like) -> Deltas:
+        return Deltas(*wire.unpack_independent_mask(payload, like))
+
     def bits_per_client(self, d: int) -> int:
         return comm.bits_fedadam_top(d, S.k_for(d, self.alpha), 1,
                                      self.q_bits)
+
+    def wire_bits_per_client(self, sizes):
+        if not self._wire_ok():
+            return None
+        return wire.mask_wire_bits(sizes, self.alpha, self.mask_scope,
+                                   self.exact_topk, shared=False)
 
 
 def _shared_factory(rule):

@@ -252,7 +252,8 @@ def _local_momentum(loss_fn, W, M, batch, fed: FedConfig):
 
 
 def make_client_step(fed: FedConfig, loss_fn: Callable,
-                     comp: Optional[compressors.Compressor] = None):
+                     comp: Optional[compressors.Compressor] = None,
+                     *, emit: str = "dense", wire_roundtrip: bool = True):
     """Build ONE client's round: local epochs + compression.
 
     ``client_step(W, M, V, batch, cstate) ->
@@ -262,9 +263,34 @@ def make_client_step(fed: FedConfig, loss_fn: Callable,
     (:mod:`repro.core.async_fed`) runs it per dispatch against a stale
     parameter snapshot.  Keeping this a single builder is what makes
     sync <-> async degenerate-config equivalence *bitwise* rather than
-    approximate (tests/test_async_fed.py)."""
+    approximate (tests/test_async_fed.py).
+
+    The carriers the step hands back are the WIRE-decoded ones whenever
+    the compressor built a bit-packed payload (core/wire.py): the server
+    sees exactly what survives the transported bytes, not the encoder's
+    dense scratch.  For mask schemes the two are bit-identical; for
+    quantized schemes they agree to the codec's round-trip (exact here:
+    codes+scales reproduce the dense carrier bitwise).  Dense transport
+    skips the round-trip — it is the identity, and FedSGD's identity
+    carriers ship W only.
+
+    ``wire_roundtrip=False`` keeps the dense-carrier output (the
+    round-trip being bitwise, numerics are unchanged) WITHOUT touching
+    the packed cohort buffer.  The mesh driver needs this: inside its
+    shard_map region the leaves are model-sharded, and the wire pack's
+    ravel/concatenate would force weight all-gathers in the global view
+    — the transport realization there is the per-shard bitmap path in
+    ``aggregate.make_shardmap_sparse_aggregate`` instead.
+
+    ``emit="wire"`` (the vmap sparse-gather transport) returns
+    ``(payload, new_cstate, metrics)`` instead — the bit-packed
+    :class:`~repro.core.wire.WirePayload` IS the client's output, so the
+    driver can move only packed words across the client axis and decode
+    server-side.  Only valid when the compressor has a wire realization
+    for this config."""
     if comp is None:
         comp = compressors.make_compressor(fed)
+    assert emit in ("dense", "wire"), emit
 
     def client_step(W, M, V, batch, cstate):
         comp_state = cstate.get("comp") if cstate is not None else None
@@ -295,7 +321,6 @@ def make_client_step(fed: FedConfig, loss_fn: Callable,
                             _tree_sub(v, V))
 
         packed, new_comp_state, _bits = comp.compress(deltas, comp_state)
-        sW, sM, sV = comp.decompress(packed)
         if cstate is None:
             new_cstate = None
         else:
@@ -303,7 +328,17 @@ def make_client_step(fed: FedConfig, loss_fn: Callable,
             if "comp" in cstate:
                 new_cstate["comp"] = new_comp_state
             new_cstate.update(extras)
-        return sW, sM, sV, new_cstate, dict(packed.diag, loss=loss)
+        mets = dict(packed.diag, loss=loss)
+        if emit == "wire":
+            assert packed.wire is not None, \
+                f"{comp.name}: emit='wire' but compress built no payload"
+            return packed.wire, new_cstate, mets
+        if wire_roundtrip and packed.wire is not None \
+                and comp.transport != "dense":
+            sW, sM, sV = comp.unpack_wire(packed.wire, deltas.W)
+        else:
+            sW, sM, sV = comp.decompress(packed)
+        return sW, sM, sV, new_cstate, mets
 
     return client_step
 
@@ -368,6 +403,11 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
     comp = compressors.make_compressor(fed)
     n_active = active_client_count(fed)
     client_step = make_client_step(fed, loss_fn, comp)
+    # the mesh driver's step skips the (bitwise-identity) wire round-trip:
+    # packing model-sharded leaves in the global view would all-gather
+    # the weights; its transport is the per-shard bitmap aggregate
+    mesh_client_step = make_client_step(fed, loss_fn, comp,
+                                        wire_roundtrip=False)
     server_apply = make_server_apply(fed, comp)
 
     # -- round drivers --------------------------------------------------
@@ -423,8 +463,8 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
             # one spatial client per device row: peel the client axis off
             # the state shard, thread it through the step, put it back
             cstate_l = jax.tree.map(lambda x: x[0], cstate)
-            sW, sM, sV, ncs, mets = client_step(Wb, Mb, Vb, batch_l,
-                                                cstate_l)
+            sW, sM, sV, ncs, mets = mesh_client_step(Wb, Mb, Vb, batch_l,
+                                                     cstate_l)
             lead = lambda t: jax.tree.map(lambda x: x[None], t)
             mets = jax.tree.map(lambda x: x[None], mets)
             return lead(sW), lead(sM), lead(sV), lead(ncs), mets
@@ -473,25 +513,54 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
         W, M, V = state.W, state.M, state.V
         cs = state.client_state
 
+        def pin(tree):
+            if not fed.client_axes:
+                return tree
+
+            def one_leaf(x):
+                spec = PartitionSpec(
+                    tuple(fed.client_axes) if len(fed.client_axes) > 1
+                    else fed.client_axes[0],
+                    *([None] * (x.ndim - 1)))
+                return lax.with_sharding_constraint(x, spec)
+            return jax.tree.map(one_leaf, tree)
+
+        in_axes = (0, 0 if cs is not None else None)
+        wsum = jnp.sum(weights.astype(_F32))
+
+        sizes = tuple(x.size for x in jax.tree.leaves(W))
+        use_wire = (fed.aggregate == "sparse_gather"
+                    and sparse_aggregate_fn is None
+                    and comp.transport != "dense"
+                    and comp.wire_bits_per_client(sizes) is not None)
+        if use_wire:
+            # wire transport: each vmapped client emits its bit-packed
+            # WirePayload; ONLY the packed words + compact value/scale
+            # streams cross the client axis, and the server decodes in
+            # client order — the ordered fold is bitwise round_scan's
+            wire_step = make_client_step(fed, loss_fn, comp, emit="wire")
+
+            def one_wire(batch, cstate):
+                return wire_step(W, M, V, batch, cstate)
+
+            payload, new_cs, mets = jax.vmap(
+                one_wire, in_axes=in_axes)(batches, cs)
+            payload = pin(payload)
+            aW, aM, aV = aggregate.packed_gather_sum(
+                comp, None, None, None, weights, alpha=fed.alpha,
+                value_dtype=fed.value_dtype, sort_free=not fed.exact_topk,
+                payload_c=payload, like=W)
+            return (aW, aM, aV), wsum, \
+                (new_cs if cs is not None else None), mets
+
         def one(batch, cstate):
             return client_step(W, M, V, batch, cstate)
 
-        in_axes = (0, 0 if cs is not None else None)
         sW, sM, sV, new_cs, mets = jax.vmap(one, in_axes=in_axes)(batches, cs)
         # pin the per-client delta stacks to the client mesh axes — without
         # this GSPMD may replicate the divergent client states (C x params
         # per device) through the vmapped local-training region
-        if fed.client_axes:
-            def pin(tree):
-                def one_leaf(x):
-                    spec = PartitionSpec(
-                        tuple(fed.client_axes) if len(fed.client_axes) > 1
-                        else fed.client_axes[0],
-                        *([None] * (x.ndim - 1)))
-                    return lax.with_sharding_constraint(x, spec)
-                return jax.tree.map(one_leaf, tree)
-            sW, sM, sV = pin(sW), pin(sM), pin(sV)
-        wsum = jnp.sum(weights.astype(_F32))
+        sW, sM, sV = pin(sW), pin(sM), pin(sV)
         if fed.aggregate == "sparse_gather" and sparse_aggregate_fn is not None:
             aW, aM, aV = sparse_aggregate_fn(sW, sM, sV, weights)
         elif fed.aggregate == "sparse_gather":
@@ -530,13 +599,19 @@ def make_fl_round(fed: FedConfig, loss_fn: Callable,
         W_new, M_new, V_new = server_apply(state.W, state.M, state.V,
                                            aW, aM, aV, wsum)
 
-        # uplink accounting: the compressor's own bits report (Section IV
-        # / VII formulas in core/comm.py) x participating clients — the
-        # metric is produced by the same object that produced the payload
+        # uplink accounting x participating clients — the metric is
+        # produced by the same object that produced the payload.  When
+        # the compressor ships a wire payload, report the MEASURED bytes
+        # (8 * WirePayload.nbytes, core/wire.py — padding and capacity
+        # slack included); only configs with no wire realization fall
+        # back to the paper-analytic Section IV/VII count.
         d = sum(x.size for x in jax.tree.leaves(state.W))
+        sizes = tuple(x.size for x in jax.tree.leaves(state.W))
+        per_client = comp.wire_bits_per_client(sizes)
+        if per_client is None:
+            per_client = comp.bits_per_client(d)
         mets = dict(mets)
-        mets["uplink_bits"] = jnp.asarray(
-            n_active * comp.bits_per_client(d), _F32)
+        mets["uplink_bits"] = jnp.asarray(n_active * per_client, _F32)
         new_state = FedState(W=W_new, M=M_new, V=V_new,
                              round=state.round + 1, client_state=new_cs)
         return new_state, mets

@@ -26,21 +26,45 @@ def _blocks(x: jax.Array, block: int):
 
 
 def sign_quant(x: jax.Array, block: int = 1024) -> jax.Array:
-    """1-bit sign quantization with per-block L1 scale (1-bit Adam)."""
+    """1-bit sign quantization with per-block L1 scale (1-bit Adam).
+
+    Strictly two-valued per block (``+scale`` for x >= 0, ``-scale``
+    otherwise) so the output is exactly representable as a sign bitplane
+    plus one f32 scale per block — the 1-bit Adam wire format
+    (core/wire.py)."""
     xb, n, _ = _blocks(x, block)
     scale = jnp.mean(jnp.abs(xb), axis=1, keepdims=True)
-    q = jnp.sign(xb) * scale
+    q = jnp.where(xb >= 0, scale, -scale)
     return q.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
 
 
-def uniform_quant(x: jax.Array, bits: int = 8, block: int = 1024) -> jax.Array:
-    """Symmetric b-bit uniform quantization with per-block max scale."""
+def uniform_encode(x: jax.Array, bits: int = 8,
+                   block: int = 1024) -> Tuple[jax.Array, jax.Array]:
+    """Encoder half of :func:`uniform_quant`: symmetric b-bit codes plus
+    per-block max scales.  Returns ``(codes int32 of x.shape, scales
+    (nb,) f32)`` with codes in ``[-qmax, qmax]``."""
     xb, n, _ = _blocks(x, block)
     qmax = 2.0 ** (bits - 1) - 1.0
     scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / qmax + 1e-30
     q = jnp.round(xb / scale)
-    q = jnp.clip(q, -qmax, qmax) * scale
-    return q.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+    q = jnp.clip(q, -qmax, qmax).astype(jnp.int32)
+    codes = q.reshape(-1)[:n].reshape(x.shape)
+    return codes, scale.reshape(-1).astype(_F32)
+
+
+def uniform_decode(codes: jax.Array, scales: jax.Array,
+                   block: int = 1024) -> jax.Array:
+    """Exact dequantizer for :func:`uniform_encode` (f32 result)."""
+    cb, n, _ = _blocks(codes, block)
+    q = cb * scales[:, None]
+    return q.reshape(-1)[:n].reshape(codes.shape)
+
+
+def uniform_quant(x: jax.Array, bits: int = 8, block: int = 1024) -> jax.Array:
+    """Symmetric b-bit uniform quantization with per-block max scale
+    (``uniform_decode(*uniform_encode(x))`` — the wire round trip)."""
+    q = uniform_decode(*uniform_encode(x, bits, block), block=block)
+    return q.astype(x.dtype)
 
 
 def int8_store(x: jax.Array, block: int = 256) -> Tuple[jax.Array, jax.Array]:

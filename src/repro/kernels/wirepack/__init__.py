@@ -1,0 +1,1 @@
+from repro.kernels.wirepack import ops, ref  # noqa: F401

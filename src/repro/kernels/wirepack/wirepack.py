@@ -1,0 +1,120 @@
+"""Bit-pack / bit-unpack Pallas kernels for the wire format.
+
+The uplink wire format (core/wire.py) ships b-bit unsigned codes packed
+into uint32 words: mask bitmaps (b=1, FedAdam-SSM Section IV), sign
+bitplanes (b=1, 1-bit Adam, arXiv 2109.05109), and b-bit quantizer
+codes (b in {2, 4, 8}, Efficient-Adam, arXiv 2205.02719).  These two
+kernels are the only data-touching passes — everything scheme-specific
+(code construction, scales, value compaction) is cheap jnp around them.
+
+Layout.  Input is the (R, 128) packed cohort buffer convention of
+``core/sparsify.PackedLayout`` with R a multiple of 32 (one grid block =
+32 sublanes x 128 lanes = 4096 codes).  Each group of T = 32 // b code
+rows collapses into one word row::
+
+    word[q, c] = sum_t code[q*T + t, c] * 2**(t*b)      (uint32)
+
+so a (32, 128) code block becomes a (b, 128) word block and the word
+buffer is exactly ``R * b / 32`` rows — bits on the wire == b bits per
+code, by construction.  Codes must already be unsigned in [0, 2**b);
+the ops layer owns the signed-offset / sign-bit conversions.
+
+Words accumulate in uint32: at b=8 the top code contributes
+``255 << 24``, which overflows int32 but is exact in uint32 (all
+multiplies are by static powers of two, so packing is lossless and
+``unpack(pack(x)) == x`` bitwise).  Oracles: ref.py; parity:
+tests/test_kernels.py; format spec: docs/wire.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+#: Rows per grid block: 32 code rows -> ``bits`` word rows.
+CODE_SUBLANES = 32
+#: Word size on the wire.
+WORD_BITS = 32
+#: Supported code widths (32 must divide evenly into b-bit lanes).
+SUPPORTED_BITS = (1, 2, 4, 8)
+
+
+def _check_bits(bits: int) -> int:
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"bits must be one of {SUPPORTED_BITS}, got {bits}")
+    return WORD_BITS // bits
+
+
+def _make_pack_kernel(bits: int):
+    T = _check_bits(bits)
+
+    def kernel(x_ref, w_ref):
+        x = x_ref[...].astype(jnp.uint32)            # (32, LANES)
+        rows = []
+        for q in range(bits):
+            acc = jnp.zeros((1, LANES), jnp.uint32)
+            for t in range(T):
+                r = q * T + t
+                acc = acc + x[r:r + 1, :] * jnp.uint32(1 << (t * bits))
+            rows.append(acc)
+        w_ref[...] = jnp.concatenate(rows, axis=0)   # (bits, LANES)
+
+    return kernel
+
+
+def _make_unpack_kernel(bits: int):
+    T = _check_bits(bits)
+    mask = (1 << bits) - 1
+
+    def kernel(w_ref, x_ref):
+        w = w_ref[...]                               # (bits, LANES) uint32
+        rows = []
+        for q in range(bits):
+            wq = w[q:q + 1, :]
+            for t in range(T):
+                rows.append(((wq >> jnp.uint32(t * bits)) & jnp.uint32(mask))
+                            .astype(jnp.int32))
+        x_ref[...] = jnp.concatenate(rows, axis=0)   # (32, LANES)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def pack_words_2d(codes, *, bits: int, interpret: bool = True):
+    """Pack an (R, LANES) int32 unsigned-code buffer (R % 32 == 0, codes
+    in [0, 2**bits)) into an (R * bits / 32, LANES) uint32 word buffer.
+    ONE launch."""
+    _check_bits(bits)
+    nb = codes.shape[0] // CODE_SUBLANES
+    return pl.pallas_call(
+        _make_pack_kernel(bits),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((CODE_SUBLANES, LANES), lambda i: (i, 0))],
+        # word blocks are (bits, LANES) — deliberately sub-tile for
+        # bits < 8: the packed rows are written once, never revisited
+        out_specs=pl.BlockSpec(  # repro-lint: disable=pallas-contract
+            (bits, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * bits, LANES), jnp.uint32),
+        interpret=interpret,
+    )(codes)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def unpack_words_2d(words, *, bits: int, interpret: bool = True):
+    """Exact inverse of :func:`pack_words_2d`: (R * bits / 32, LANES)
+    uint32 words back to (R, LANES) int32 unsigned codes.  ONE launch."""
+    _check_bits(bits)
+    nb = words.shape[0] // bits
+    return pl.pallas_call(
+        _make_unpack_kernel(bits),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec(  # repro-lint: disable=pallas-contract
+            (bits, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((CODE_SUBLANES, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * CODE_SUBLANES, LANES),
+                                       jnp.int32),
+        interpret=interpret,
+    )(words)

@@ -1,5 +1,6 @@
 """Known-bad bits-accounting fixture: a registered compressor without a
-real bits_per_client, plus doc-table drift in both directions."""
+real bits_per_client, doc-table drift in both directions, a compress
+that ships no wire payload, and an off-contract quantizer block."""
 
 
 def register(name):
@@ -17,7 +18,7 @@ class NoBitsCompressor(Compressor):
     """Defines nothing: inherits only the pure-raise protocol stub."""
 
     def compress(self, deltas, state):
-        return deltas, state, 0
+        return deltas, state, self.pack_wire(deltas), 0
 
 
 @register("no_bits")
@@ -33,3 +34,38 @@ class FineCompressor(Compressor):
 @register("undocumented")
 def _fine_factory(fed):
     return FineCompressor()
+
+
+class NoWireCompressor(Compressor):
+    """Real bits formula, but compress never builds a WirePayload —
+    the reported bits have no transported bytes behind them."""
+
+    def bits_per_client(self, d):
+        return d
+
+    def compress(self, deltas, state):
+        return deltas, state, 0
+
+
+@register("no_wire")
+def _no_wire_factory(fed):
+    return NoWireCompressor()
+
+
+class OddBlockCompressor(Compressor):
+    """block=512 disagrees with wire.SCALE_BLOCK: the payload's
+    per-1024-element scale stream would misalign with the quantizer."""
+
+    block = 512
+
+    def bits_per_client(self, d):
+        return d + 32 * (d // self.block)
+
+    def compress(self, deltas, state):
+        payload = wire.pack_sign(deltas)  # noqa: F821 (AST-only fixture)
+        return deltas, state, payload, 0
+
+
+@register("odd_block")
+def _odd_block_factory(fed):
+    return OddBlockCompressor()

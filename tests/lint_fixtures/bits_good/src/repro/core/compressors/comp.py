@@ -1,4 +1,5 @@
-"""Known-good bits-accounting fixture: registry, bits, and docs agree."""
+"""Known-good bits-accounting fixture: registry, bits, wire payloads,
+block literals, and docs agree."""
 
 
 def register(name):
@@ -13,13 +14,16 @@ class Compressor:
 
 
 class _Base(Compressor):
+    block = 1024
+
     def bits_per_client(self, d):
         return 32 * d
 
 
 class DenseLike(_Base):
     def compress(self, deltas, state):
-        return deltas, state, 0
+        payload = self.pack_wire(deltas)
+        return deltas, state, payload, 0
 
 
 @register("dense_like")

@@ -183,8 +183,9 @@ def test_drop_after_compress_preserves_state_and_bits():
                               pick(st1.client_state, c))
     # bits: only landed updates are billed, and they match comm.bits_for
     d = sum(x.size for x in jax.tree.leaves(st0.W))
+    sizes = tuple(x.size for x in jax.tree.leaves(st0.W))
     per_client = comm.bits_for(fed.algorithm, d, S.k_for(d, fed.alpha),
-                               1, 32)
+                               1, 32, sizes=sizes, alpha=fed.alpha)
     assert float(mets["uplink_bits"]) == (C - 1) * float(per_client)
 
 
@@ -215,8 +216,9 @@ def test_stale_straggler_discarded_with_same_guarantees():
     landed_victim = [e for e in mets["events"]
                      if e[1] == "deliver" and e[2] == victim]
     d = sum(x.size for x in jax.tree.leaves(st0.W))
+    sizes = tuple(x.size for x in jax.tree.leaves(st0.W))
     per_client = comm.bits_for(fed.algorithm, d, S.k_for(d, fed.alpha),
-                               1, 32)
+                               1, 32, sizes=sizes, alpha=fed.alpha)
     assert float(mets["uplink_bits"]) == \
         float(mets["landed"]) * float(per_client)
     if not landed_victim:

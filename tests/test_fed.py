@@ -100,12 +100,34 @@ def test_converges_on_toy(algo):
 
 
 def test_uplink_bits_ordering():
-    """SSM < Top < dense bit counts at alpha=0.05 (Section IV)."""
-    _, _, m_ssm = _run("fedadam_ssm", rounds=1, alpha=0.05)
-    _, _, m_top = _run("fedadam_top", rounds=1, alpha=0.05)
-    _, _, m_dense = _run("fedadam", rounds=1, alpha=0.05)
-    assert float(m_ssm["uplink_bits"]) < float(m_top["uplink_bits"]) \
-        < float(m_dense["uplink_bits"])
+    """SSM < Top < dense bit counts at alpha=0.05 (Section IV).
+
+    The round now reports WIRE-EXACT bits (8 * WirePayload.nbytes,
+    core/wire.py), so this runs on a model large enough that the
+    format's 4096-element alignment padding is second-order — on the
+    36-parameter toy tree the bitmap padding alone exceeds the dense
+    payload and honest accounting inverts the paper's ordering.  The
+    padding arithmetic itself is pinned by tests/test_wire.py."""
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (512, 32)) * 0.1,
+              "b": jnp.zeros((32,))}
+    C = 2
+    xs = jax.random.normal(jax.random.PRNGKey(1), (C, 8, 512))
+    w_true = jax.random.normal(jax.random.PRNGKey(2), (512, 32))
+    ys = jnp.einsum("cbi,ij->cbj", xs, w_true)
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    def bits(algo):
+        fed = FedConfig(algorithm=algo, alpha=0.05, local_epochs=1,
+                        n_clients=C, adam=AdamHyper(lr=0.05))
+        rf = jax.jit(make_fl_round(fed, loss_fn))
+        _, mets = rf(fed_init(fed, params), (xs, ys))
+        return float(mets["uplink_bits"])
+
+    assert bits("fedadam_ssm") < bits("fedadam_top") < bits("fedadam")
 
 
 def test_shared_mask_alignment():

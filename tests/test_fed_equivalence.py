@@ -107,7 +107,10 @@ _SUB = textwrap.dedent("""
             rounds.append(dict(global_maxdiff=gmd, global_eq=geq,
                                cs_maxdiff=cmd, cs_eq=ceq))
         k = S.k_for(d, kw.get("alpha", 0.05))
-        expect_bits = float(C * comm.bits_for(algo, d, k, 1, 32))
+        sizes = tuple(x.size for x in jax.tree.leaves(params))
+        expect_bits = float(C * comm.bits_for(
+            algo, d, k, 1, 32, sizes=sizes,
+            alpha=kw.get("alpha", 0.05)))
         out[algo] = dict(rounds=rounds, uplink_bits=bits,
                          expect_bits=expect_bits)
     print("RESULT", json.dumps(out))
@@ -155,5 +158,6 @@ def test_scan_shardmap_equivalence(equiv, algo):
 @pytest.mark.slow
 @pytest.mark.parametrize("algo", sorted(STATEFUL))
 def test_mesh_uplink_bits_match_comm(equiv, algo):
-    """bits reported by a mesh-driver round == comm.py analytic count."""
+    """bits reported by a mesh-driver round == comm.py wire-exact count
+    (``comm.bits_for(..., sizes=...)`` == 8 * WirePayload.nbytes)."""
     assert equiv[algo]["uplink_bits"] == equiv[algo]["expect_bits"], algo

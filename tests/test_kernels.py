@@ -217,3 +217,74 @@ def test_fused_adam_in_optimizer_loop():
 
     a, b = run(False), run(True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# wirepack: word-level pack/unpack parity (kernel vs oracle, bitwise)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.wirepack import ops as wp_ops
+from repro.kernels.wirepack.ref import (pack_bbit_ref, pack_mask_bits_ref,
+                                        pack_sign_scale_ref, pack_words_ref,
+                                        unpack_bbit_ref,
+                                        unpack_mask_bits_ref,
+                                        unpack_sign_scale_ref,
+                                        unpack_words_ref)
+from repro.kernels.wirepack.wirepack import (pack_words_2d, unpack_words_2d)
+
+_WP_ROWS = [32, 96]  # row-group quantum is 32; cover multi-group grids
+
+
+@pytest.mark.parametrize("rows", _WP_ROWS)
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+def test_wirepack_words_kernel_matches_ref(rows, bits):
+    """The one kernel pair under everything: (rows,128) codes <->
+    uint32 words, bitwise against the jnp shift/mask oracle."""
+    codes = jax.random.randint(jax.random.PRNGKey(bits * 100 + rows),
+                               (rows, 128), 0, 1 << bits, jnp.int32)
+    words = pack_words_2d(codes, bits=bits, interpret=True)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (rows * bits // 32, 128)
+    assert bool(jnp.all(words == pack_words_ref(codes, bits)))
+    back = unpack_words_2d(words, bits=bits, interpret=True)
+    assert bool(jnp.all(back == codes))
+    assert bool(jnp.all(unpack_words_ref(words, bits) == codes))
+
+
+@pytest.mark.parametrize("rows", _WP_ROWS)
+def test_wirepack_mask_bits_matches_ref(rows):
+    sup = (jax.random.uniform(jax.random.PRNGKey(rows), (rows, 128))
+           < 0.3).astype(jnp.int32)
+    words = wp_ops.pack_mask_bits(sup)
+    assert bool(jnp.all(words == pack_mask_bits_ref(sup)))
+    assert bool(jnp.all(wp_ops.unpack_mask_bits(words) == sup))
+    assert bool(jnp.all(unpack_mask_bits_ref(words) == sup))
+
+
+@pytest.mark.parametrize("rows", _WP_ROWS)
+def test_wirepack_sign_scale_matches_ref(rows):
+    """Exact on sign_quant carriers: blocks are two-valued +-scale, so
+    the decode is bitwise the carrier."""
+    from repro.core import quantize
+    x = jax.random.normal(jax.random.PRNGKey(rows + 1), (rows * 128,))
+    carrier = quantize.sign_quant(x, block=1024).reshape(rows, 128)
+    wk, sk = wp_ops.pack_sign_scale(carrier)
+    wr, sr = pack_sign_scale_ref(carrier)
+    assert bool(jnp.all(wk == wr)) and bool(jnp.all(sk == sr))
+    out_k = wp_ops.unpack_sign_scale(wk, sk)
+    out_r = unpack_sign_scale_ref(wr, sr)
+    assert bool(jnp.all(out_k == carrier))
+    assert bool(jnp.all(out_r == carrier))
+
+
+@pytest.mark.parametrize("rows", _WP_ROWS)
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_wirepack_bbit_matches_ref(rows, bits):
+    qmax = (1 << (bits - 1)) - 1
+    codes = jax.random.randint(jax.random.PRNGKey(bits * 7 + rows),
+                               (rows, 128), -qmax, qmax + 1, jnp.int32)
+    wk = wp_ops.pack_bbit(codes, bits)
+    wr = pack_bbit_ref(codes, bits)
+    assert bool(jnp.all(wk == wr))
+    assert bool(jnp.all(wp_ops.unpack_bbit(wk, bits) == codes))
+    assert bool(jnp.all(unpack_bbit_ref(wr, bits) == codes))

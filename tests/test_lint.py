@@ -95,7 +95,10 @@ def test_bits_bad_flags_missing_bits_and_doc_drift():
     assert "`NoBitsCompressor` neither defines nor inherits" in msgs
     assert "`undocumented` is missing from" in msgs
     assert "`ghost_entry` names no registered compressor" in msgs
-    assert len(found) == 4, found
+    assert "`no_wire` (NoWireCompressor.compress) builds no WirePayload" \
+        in msgs
+    assert "`OddBlockCompressor` sets block=512" in msgs
+    assert len(found) == 6, found
 
 
 def test_bits_good_is_clean():

@@ -31,6 +31,7 @@ REQUIRED_DOCS = (
     "docs/kernels.md",
     "docs/benchmarks.md",
     "docs/linting.md",
+    "docs/wire.md",
 )
 
 

@@ -14,7 +14,15 @@ imports it) and checks:
   defines or inherits a real ``bits_per_client``;
 * the "Built-in algorithms" table in ``docs/compressors.md`` names
   exactly the set of registered algorithms — a registered name missing
-  from the table, or a table row for an unregistered name, is an error.
+  from the table, or a table row for an unregistered name, is an error;
+* every registered compressor's ``compress`` (found through the base
+  walk) builds a wire payload — a ``WirePayload`` construction, a
+  ``pack_wire`` call, or a ``wire.pack_*`` builder call must appear in
+  the body, so a new scheme cannot ship dense bytes while reporting
+  compressed bits (docs/wire.md);
+* a class-level ``block`` literal must equal ``wire.SCALE_BLOCK`` (read
+  from ``src/repro/core/wire.py``, 1024) — an off-contract quantizer
+  block silently misaligns the payload's per-block scale stream.
 
 Registration is recognized both as a decorator (``@register("x")``) and
 as a direct call (``register("x")(factory(...))``); the factory body is
@@ -78,6 +86,71 @@ def _derives_from_compressor(name: str, classes: Dict[str, _Class],
                 b, classes, seen)):
             return True
     return False
+
+
+def _find_method(name: str, mname: str, classes: Dict[str, _Class],
+                 seen: Optional[Set[str]] = None
+                 ) -> Optional[ast.FunctionDef]:
+    """The method a class would inherit: own def first, then bases."""
+    seen = seen or set()
+    if name in seen or name not in classes:
+        return None
+    seen.add(name)
+    cls = classes[name]
+    if mname in cls.methods:
+        return cls.methods[mname]
+    for b in cls.bases:
+        fn = _find_method(b, mname, classes, seen) if b else None
+        if fn is not None:
+            return fn
+    return None
+
+
+def _builds_payload(fn: ast.FunctionDef) -> bool:
+    """True if the body contains a wire-payload construction: a
+    ``WirePayload(...)`` call, any ``*pack_wire(...)`` call, or a
+    ``wire.pack_*(...)`` builder call."""
+    for call in ast.walk(fn):
+        if not isinstance(call, ast.Call):
+            continue
+        path = dotted(call.func) or ""
+        name = last_segment(path)
+        if name == "WirePayload" or name.endswith("pack_wire") \
+                or path.startswith("wire.pack"):
+            return True
+    return False
+
+
+def _scale_block(ctx: Context) -> int:
+    """``wire.SCALE_BLOCK`` read from the AST (fallback 1024)."""
+    tree = ctx.tree(ctx.root / "src" / "repro" / "core" / "wire.py")
+    if tree is not None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == "SCALE_BLOCK"
+                    for t in node.targets) \
+                    and isinstance(node.value, ast.Constant) \
+                    and isinstance(node.value.value, int):
+                return node.value.value
+    return 1024
+
+
+def _block_literal(cls: _Class) -> Optional[Tuple[int, int]]:
+    """(value, line) of a class-level ``block = <int>`` literal."""
+    for stmt in cls.node.body:
+        if isinstance(stmt, ast.AnnAssign) \
+                and isinstance(stmt.target, ast.Name) \
+                and stmt.target.id == "block" \
+                and isinstance(stmt.value, ast.Constant) \
+                and isinstance(stmt.value.value, int):
+            return stmt.value.value, stmt.lineno
+        if isinstance(stmt, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "block"
+                for t in stmt.targets) \
+                and isinstance(stmt.value, ast.Constant) \
+                and isinstance(stmt.value.value, int):
+            return stmt.value.value, stmt.lineno
+    return None
 
 
 def _instantiated_classes(node: ast.AST,
@@ -181,6 +254,20 @@ def check(ctx: Context) -> List[Finding]:
                 f"{sorted(insts)} which define(s) no real "
                 f"bits_per_client"))
 
+    # (1b) every registration's compress builds a wire payload
+    for name, (rel, line, target) in sorted(registered.items()):
+        if target is None:
+            continue
+        for cname in sorted(_instantiated_classes(target, classes)):
+            fn = _find_method(cname, "compress", classes)
+            if fn is not None and not _pure_raise(fn) \
+                    and not _builds_payload(fn):
+                findings.append(Finding(
+                    "bits-accounting", rel, line,
+                    f"registered compressor `{name}` ({cname}.compress) "
+                    f"builds no WirePayload (wire.pack_* / pack_wire) — "
+                    f"transported bytes cannot match reported bits"))
+
     # (2) every public Compressor subclass has a real bits_per_client
     for cname, cls in sorted(classes.items()):
         if cname.startswith("_") or cname == "Compressor":
@@ -191,6 +278,20 @@ def check(ctx: Context) -> List[Finding]:
                 "bits-accounting", cls.rel, cls.node.lineno,
                 f"compressor class `{cname}` neither defines nor "
                 f"inherits a real bits_per_client"))
+
+    # (2b) class-level block literals match wire.SCALE_BLOCK
+    sb = _scale_block(ctx)
+    for cname, cls in sorted(classes.items()):
+        if cname == "Compressor" \
+                or not _derives_from_compressor(cname, classes):
+            continue
+        lit = _block_literal(cls)
+        if lit is not None and lit[0] != sb:
+            findings.append(Finding(
+                "bits-accounting", cls.rel, lit[1],
+                f"compressor class `{cname}` sets block={lit[0]} but the "
+                f"wire scale stream is one f32 per SCALE_BLOCK={sb} "
+                f"elements — payload scales would misalign"))
 
     # (3) docs table <-> registry set equality
     rows = _doc_table(ctx)
